@@ -1,0 +1,32 @@
+"""Shared benchmark helpers: wall-clock timing + CSV rows.
+
+Every benchmark module exposes ``run() -> list[(name, us_per_call, derived)]``
+and ``benchmarks.run`` aggregates them into the required CSV.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-clock microseconds per call (blocks on jax outputs)."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")

@@ -1,0 +1,82 @@
+"""Fig. 1 analogue: sampling-stage share of end-to-end dLLM latency.
+
+Two tracks:
+  (a) analytical sweep over the paper's profiling grid (batch 1-32, steps
+      1-32, gen 64-1024, block 8-64) for LLaDA-8B and LLaDA-MoE under the
+      *reference software* sampling (FP64 full-softmax) vs DART's engine
+      (MXFP8 Stable-Max).  Headline: max sampling fraction over the grid
+      (paper: up to 71% reference; <10% after DART+MXFP8).
+  (b) measured on CPU with the smoke model: wall-clock split between
+      model() and the sampling stage across sampling precisions.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_call
+from repro.configs import base
+from repro.core import sampling as sampling_lib
+from repro.models.registry import build_model
+from repro.sim.analytical import HWConfig, end_to_end
+
+
+def run() -> list:
+    rows: list[Row] = []
+    hw = HWConfig()
+
+    # (a) analytical grid sweep
+    grid = list(itertools.product([1, 8, 32], [8, 16, 32], [256, 1024],
+                                  [16, 64]))
+    for arch in ["llada-8b", "llada-moe-7b-a1b"]:
+        cfg = base.get_config(arch)
+        fracs_ref, fracs_dart = [], []
+        for B, steps, gen, blk in grid:
+            if blk > gen:
+                continue
+            r_ref = end_to_end(cfg, hw, B=B, prompt=128, gen_len=gen,
+                               block_len=blk, steps=steps, cache_mode="dual",
+                               sampling_fmt="fp64",
+                               sampling_engine="reference")
+            r_dart = end_to_end(cfg, hw, B=B, prompt=128, gen_len=gen,
+                                block_len=blk, steps=steps, cache_mode="dual",
+                                sampling_fmt="mxfp8_e4m3")
+            fracs_ref.append(r_ref.sampling_frac)
+            fracs_dart.append(r_dart.sampling_frac)
+        rows.append((f"fig1/analytic/{arch}/ref_fp64_max_frac",
+                     r_ref.total_s * 1e6,
+                     f"max_sampling_frac={max(fracs_ref):.3f}"))
+        rows.append((f"fig1/analytic/{arch}/dart_mxfp8_max_frac",
+                     r_dart.total_s * 1e6,
+                     f"max_sampling_frac={max(fracs_dart):.3f}"))
+
+    # (b) measured (CPU, smoke config): model pass vs sampling stage
+    cfg = base.get_config("llada-8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, L = 4, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0,
+                              cfg.vocab - 2)
+
+    fwd = jax.jit(lambda p, t: model.forward(p, tokens=t)[0])
+    logits = fwd(params, toks)
+    us_model = time_call(fwd, params, toks)
+
+    for fmt in ["none", "bf16", "mxfp8_e4m3"]:
+        scfg = sampling_lib.SamplingConfig(fmt=fmt)
+        k = jnp.full((B,), 4, jnp.int32)
+        samp = jax.jit(lambda lg, x: sampling_lib.sampling_step(
+            lg, x, cfg.mask_id, k, scfg))
+        us_samp = time_call(samp, logits, toks)
+        frac = us_samp / (us_samp + us_model)
+        rows.append((f"fig1/measured/sampling_{fmt}", us_samp,
+                     f"sampling_frac={frac:.3f}"))
+    rows.append(("fig1/measured/model_fwd", us_model, "stage=model"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

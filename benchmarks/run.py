@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Modules:
+  fig1_breakdown       sampling share of e2e latency (reference vs DART)
+  fig7_sampling_sweeps sampling engine B/T/V/V_chunk sweeps + SRAM model
+  table2_hbm           HBM bandwidth model vs datasheet/physical points
+  table3_pipeline      latency library + compound-sequence pipeline model
+  table4_crossval      analytical vs XLA-roofline cross-validation
+  table5_quant         KV quantization quality (BAOS vs KV4 vs QuaRot)
+  table6_end2end       end-to-end TPS/energy vs the paper's GPU rows
+  fig9_dse             design-space sweep (VLEN/MLEN/BLEN)
+  roofline_report      §Roofline tables from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig1_breakdown", "fig7_sampling_sweeps", "table2_hbm",
+    "table3_pipeline", "table4_crossval", "table5_quant",
+    "table6_end2end", "fig9_dse", "roofline_report",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for name in MODULES:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows = mod.run()
+            for r_name, us, derived in rows:
+                print(f"{r_name},{us:.3f},{derived}")
+            print(f"bench/{name}/wall,{(time.time()-t0)*1e6:.0f},ok",
+                  flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"bench/{name}/wall,{(time.time()-t0)*1e6:.0f},FAILED",
+                  flush=True)
+    if failures:
+        sys.exit(f"benchmark modules failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Table 2 analogue: memory-subsystem model vs datasheet / measured points.
+
+The paper cross-validates its Ramulator HBM2e model against an AMD Alveo
+V80 (2-stack, 64ch, datasheet 819 GB/s): physical 763/705 GB/s (W/R), sim
++5.3%/+3.3% vs spec.  We reproduce the *analytical* side: an efficiency
+model (burst amortization + outstanding-transaction occupancy) evaluated at
+the paper's AXI configuration, checked against the paper's published
+physical numbers, plus the 4-stack projection.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row
+
+DATASHEET_2STACK = 819e9
+PAPER_PHYS = {"write": 763e9, "read": 705e9}
+PAPER_SIM = {"write": 862.5e9, "read": 846.4e9}
+
+
+def effective_bw(stacks: int, *, burst_bytes: int = 4096,
+                 outstanding: int = 3, latency_ns: float = 120.0,
+                 write: bool = True) -> float:
+    """Simple occupancy model: eff = min(peak, outstanding*burst/latency),
+    derated by bank-conflict/refresh factors (write cheaper than read
+    turnaround on HBM2e)."""
+    peak = stacks * DATASHEET_2STACK / 2
+    stream = outstanding * burst_bytes / (latency_ns * 1e-9)
+    derate = 0.95 if write else 0.88   # refresh + read/write turnaround
+    return min(peak, stream) * derate
+
+
+def run() -> list:
+    rows: list[Row] = []
+    for stacks in (2, 4):
+        for kind, w in (("write", True), ("read", False)):
+            bw = effective_bw(stacks, outstanding=3 if w else 4, write=w)
+            derived = f"GBps={bw/1e9:.1f}"
+            if stacks == 2:
+                err_phys = bw / PAPER_PHYS[kind] - 1
+                err_spec = bw / DATASHEET_2STACK - 1
+                derived += (f";err_vs_phys={100*err_phys:+.1f}%"
+                            f";err_vs_spec={100*err_spec:+.1f}%")
+            rows.append((f"table2/{stacks}stack/{kind}", 0.0, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

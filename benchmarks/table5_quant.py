@@ -1,0 +1,196 @@
+"""Table 5 analogue: KV-cache quantization quality — BF16 vs naive KV4 vs
+QuaRot (rotation) vs DART-BAOS (mean/minmax, alpha sweep).
+
+GSM8K/HumanEval need trained 8B checkpoints; the container-scale proxy
+keeps the *comparative* structure of Table 5 with two tracks:
+
+  (1) tensor track — KV tensors with paper-profile channel outliers
+      (13-19x the global mean, drifting across diffusion steps as §4.4
+      profiles): per-method attention-output relative error, calibrated at
+      a warm step and *reused across refinement steps* exactly as BAOS
+      prescribes (so methods that don't track the shift degrade).
+  (2) end-task track — a tiny dLLM trained on synthetic copy-structure
+      data; generation agreement vs the BF16 reference decode and task
+      accuracy (motif continuation) per KV-quant config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import base
+from repro.core import baos as baos_lib
+from repro.core import diffusion, mx, quarot
+from repro.kernels import ref as kref
+from repro.models.registry import build_model
+from repro.optim import adamw
+
+
+def _outlier_kv(rng, B=2, S=64, H=4, D=64, n_out=6, drift=0.3, step=0):
+    """KV with 13-19x channel outliers whose identity drifts across steps.
+
+    The paper's §4.4.1 profiling finds >70% of top outlier channels stay
+    consistent between the warm step and all refinements; ``drift`` models
+    the complementary churn as *emerging* outliers (new channels grow to
+    ~4x before reaching full magnitude — distributions shift gradually,
+    they don't teleport)."""
+    r1, r2, r3 = jax.random.split(jax.random.fold_in(rng, step), 3)
+    x = jax.random.normal(r1, (B, S, H, D))
+    base_idx = jnp.arange(n_out) * (D // n_out)
+    scale = 13.0 + 6.0 * jax.random.uniform(r2, (n_out,))
+    boost = jnp.ones((D,)).at[base_idx].set(scale)
+    if step > 0:
+        emerge = (jax.random.uniform(r3, (n_out,)) < drift).astype(
+            jnp.float32)
+        new_idx = (base_idx + 1) % D
+        boost = boost.at[new_idx].set(1.0 + 3.0 * emerge)   # ~4x emerging
+    return x * boost[None, None, None, :]
+
+
+def _attn_err(q, k, v, kq, vq, calib=None):
+    ref_o = kref.flash_bidir_ref(q, k, v)
+    if calib is not None:
+        out = kref.flash_bidir_ref(q, kq, vq, fk=calib.k_scale[:, 0],
+                                   fv=calib.v_scale[:, 0],
+                                   cv=calib.v_center[:, 0])
+    else:
+        out = kref.flash_bidir_ref(q, kq, vq)
+    num = jnp.linalg.norm((out - ref_o).astype(jnp.float32))
+    return float(num / (jnp.linalg.norm(ref_o.astype(jnp.float32)) + 1e-9))
+
+
+def _recon_err(orig, rec):
+    return float(jnp.linalg.norm((rec - orig).astype(jnp.float32)) /
+                 (jnp.linalg.norm(orig.astype(jnp.float32)) + 1e-9))
+
+
+def tensor_track() -> list:
+    rows = []
+    rng = jax.random.PRNGKey(0)
+    B, S, H, D = 2, 64, 4, 64
+    # moderate score scale: keeps softmax entropy in the regime real models
+    # operate in (huge outlier scores would make every method look random)
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, 16, H, D)) * 0.15
+
+    warm_k = _outlier_kv(rng, B, S, H, D, step=0)
+    warm_v = _outlier_kv(jax.random.fold_in(rng, 99), B, S, H, D, step=0)
+
+    configs = {
+        "kv4_naive": None,
+        "quarot": "rot",
+    }
+    for variant in ("mean", "minmax"):
+        for alpha in (1.0, 0.9, 0.6):
+            configs[f"baos_{variant}_a{alpha}"] = baos_lib.BAOSConfig(
+                enabled=True, variant=variant, alpha=alpha,
+                kv_format="mxint4")
+
+    # warm-step calibration (BAOS only), then evaluate on drifted steps
+    for name, cfg in configs.items():
+        errs, rerrs = [], []
+        for step in range(4):
+            k = _outlier_kv(rng, B, S, H, D, step=step)
+            v = _outlier_kv(jax.random.fold_in(rng, 99), B, S, H, D,
+                            step=step)
+            if cfg is None:
+                kq = mx.mx_fake_quant(k, "mxint4")
+                vq = mx.mx_fake_quant(v, "mxint4")
+                rerrs.append(_recon_err(k, kq))
+                errs.append(_attn_err(q, k, v, kq, vq))
+            elif cfg == "rot":
+                kq, vq = quarot.quarot_quantize_kv(k, v, "mxint4")
+                qe = quarot.rotate(q)
+                ref_o = kref.flash_bidir_ref(q, k, v)
+                out = kref.flash_bidir_ref(qe, kq, vq)
+                # V returned in rotated space: unrotate
+                out = quarot.unrotate(out)
+                rerrs.append(_recon_err(quarot.rotate(k), kq))
+                errs.append(float(
+                    jnp.linalg.norm((out - ref_o).astype(jnp.float32)) /
+                    (jnp.linalg.norm(ref_o.astype(jnp.float32)) + 1e-9)))
+            else:
+                calib = baos_lib.calibrate(warm_k, warm_v, cfg)  # warm only
+                kq, vq = baos_lib.smooth_quantize_kv(k, v, calib, cfg)
+                krec, _ = baos_lib.dequantize_kv(kq, vq, calib)
+                rerrs.append(_recon_err(k, krec))
+                errs.append(_attn_err(q, k, v, kq, vq, calib))
+        rows.append((f"table5/tensor/{name}", 0.0,
+                     f"kv_recon_err={np.mean(rerrs):.4f};"
+                     f"attn_rel_err={np.mean(errs):.4f}"))
+    return rows
+
+
+def endtask_track() -> list:
+    rows = []
+    cfg = base.get_config("llada-8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # train briefly on motif data (period-4 copy patterns)
+    period, B, S = 4, 16, 64
+    opt = adamw.OptConfig(lr=1e-2, schedule="const", warmup_steps=10)
+    ostate = adamw.init_state(params)
+
+    from repro.data.pipeline import motif_pool_batch
+
+    def make_batch(step):
+        return motif_pool_batch(step, period=period, batch=B, seq_len=S,
+                                vocab=cfg.vocab)
+
+    @jax.jit
+    def train_step(p, o, toks, step):
+        rng = jax.random.fold_in(jax.random.PRNGKey(1), step)
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: diffusion.masked_diffusion_loss(model, pp, toks, rng),
+            has_aux=True)(p)
+        p, o, _ = adamw.apply_updates(p, g, o, opt)
+        return p, o, loss
+
+    for step in range(300):
+        params, ostate, loss = train_step(params, ostate,
+                                          make_batch(step), step)
+
+    prompt = make_batch(1000)[:4, :32]
+
+    def gen(baos_cfg):
+        d = diffusion.DiffusionConfig(
+            gen_length=16, block_length=8, steps_per_block=4,
+            cache_mode="dual", baos=baos_cfg)
+        return diffusion.generate(model, params, prompt, d,
+                                  rng=jax.random.PRNGKey(3))
+
+    ref_out = gen(baos_lib.BAOSConfig(enabled=False))
+    gen_ref = np.asarray(ref_out[:, 32:])
+    # task accuracy: does generation continue the motif?
+    target = np.asarray(jnp.tile(prompt[:, :period], (1, 4))[:, :16])
+    acc_ref = float((gen_ref == target).mean())
+    rows.append(("table5/endtask/bf16", 0.0,
+                 f"task_acc={acc_ref:.3f};agreement=1.000"))
+
+    for name, bcfg in [
+        ("kv4_naive", baos_lib.BAOSConfig(enabled=True, alpha=0.0,
+                                          kv_format="mxint4")),
+        ("baos_minmax_a1.0", baos_lib.BAOSConfig(enabled=True,
+                                                 variant="minmax", alpha=1.0,
+                                                 kv_format="mxint4")),
+        ("baos_mean_a0.6", baos_lib.BAOSConfig(enabled=True, variant="mean",
+                                               alpha=0.6,
+                                               kv_format="mxint4")),
+    ]:
+        out = np.asarray(gen(bcfg)[:, 32:])
+        agree = float((out == gen_ref).mean())
+        acc = float((out == target).mean())
+        rows.append((f"table5/endtask/{name}", 0.0,
+                     f"task_acc={acc:.3f};agreement={agree:.3f}"))
+    return rows
+
+
+def run() -> list:
+    return tensor_track() + endtask_track()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,34 @@
+"""End-to-end dLLM training driver.
+
+Trains a LLaDA-style masked-diffusion LM on the synthetic corpus with the
+full production substrate: WSD schedule, async checkpointing, fault-
+tolerant runtime, straggler watchdog.  The default fits a CPU smoke run;
+``--d-model 512 --layers 12 --steps 300`` gives a ~100M-param run on real
+hardware (the same code path the dry-run lowers at 512 chips).
+
+    PYTHONPATH=src python examples/train_dllm.py --steps 40
+"""
+import argparse
+import dataclasses
+
+from repro.launch import train as train_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llada-8b")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    losses = train_cli.main([
+        "--arch", args.arch, "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--ckpt-dir", "/tmp/repro_example_train"])
+    assert losses[-1] < losses[0], "loss did not improve"
+    print(f"loss improved {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""LLaDA-MoE-7B-A1B (paper's MoE model), approximate public config.
+
+24L d_model=2048 16H (kv=16), 64 experts top-2, expert d_ff=1408,
+vocab=126464.  Registered for the paper's Fig. 1 / Table 6 MoE track
+(exact HF config unpublished at paper time; documented approximation).
+"""
+from repro.configs import base
+from repro.models import moe as moe_lib
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llada-moe-7b-a1b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16, d_head=128,
+    d_ff=1408, vocab=126464, mask_token_id=126336,
+    moe=moe_lib.MoEConfig(num_experts=64, top_k=2, d_ff_expert=1408),
+)
+
+SMOKE = ModelConfig(
+    name="llada-moe-7b-a1b", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+    d_ff=64, vocab=257, mask_token_id=256,
+    moe=moe_lib.MoEConfig(num_experts=4, top_k=2, d_ff_expert=64),
+    dtype="float32", attn_chunk=64,
+)
+
+base.register(CONFIG, SMOKE)

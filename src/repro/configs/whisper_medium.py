@@ -1,0 +1,26 @@
+"""whisper-medium [audio]: enc-dec transformer backbone, conv frontend STUB.
+
+24L (x2: encoder + decoder) d_model=1024 16H (kv=16) d_ff=4096 vocab=51865.
+[arXiv:2212.04356]  input_specs() provides precomputed frame embeddings
+(B, 1500, 1024).  Adaptation note: the decoder uses RoPE instead of
+Whisper's learned positions (a 524k-entry learned table is not meaningful;
+recorded in DESIGN.md).  LayerNorm + GELU per the original.
+"""
+from repro.configs import base
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_head=64,
+    d_ff=4096, vocab=51865, norm="ln", ffn="gelu",
+    n_encoder_layers=24, n_audio_ctx=1500,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-medium", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+    d_ff=128, vocab=257, norm="ln", ffn="gelu",
+    n_encoder_layers=2, n_audio_ctx=16, dtype="float32", attn_chunk=64,
+)
+
+base.register(CONFIG, SMOKE)

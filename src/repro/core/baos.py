@@ -1,0 +1,165 @@
+"""Block-Adaptive Online Smoothing (BAOS) for dLLM KV-cache quantization.
+
+Paper §4.4: blocked diffusion decoding recomputes the *full* KV cache at the
+warm step of every generation block.  BAOS treats that warm step as a
+zero-overhead online calibration point:
+
+  * per-channel center  c  (mean or minmax midpoint), shape (B, 1, H, D)
+  * per-channel radius  f = max(x_max - c, c - x_min) ** alpha
+
+KV is cached *smoothed*:  x_s = (x - c) / f  ->  MX quantizer.  During
+refinement attention the inverse scale is fused into the query
+(Q_s = Q * f_k) instead of unscaling the cache (paper Fig. 8), and two exact
+identities make the centers free (DESIGN.md §7):
+
+  * K-center:  Q Kᵀ = (Q·f_k) K_sᵀ + (Q·c_k) 1ᵀ — the second term is constant
+    across keys for each query row, so it cancels inside softmax exactly.
+  * V-center:  P (f_v·V_s + c_v) = (P V_s)·f_v + c_v  because softmax rows
+    sum to 1.
+
+Layout convention in this repo: KV tensors are (B, S, H_kv, D); calibration
+reduces over axis=1 (paper reduces over S in (B,H,S,D) — same reduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mx
+
+
+@dataclasses.dataclass(frozen=True)
+class BAOSConfig:
+    enabled: bool = True
+    variant: str = "minmax"          # "mean" (c = temporal mean) | "minmax"
+    alpha: float = 1.0               # per-channel power transform, Eq. 9
+    kv_format: str = "mxint4"        # MX format for the smoothed cache
+    eps: float = 1e-6
+    # Calibration reduction scope at the warm step.  The paper reduces over
+    # the *active block* (§4.4.2) — which at the warm step holds only mask
+    # tokens; that relies on outlier channels being weight-driven (true for
+    # large trained models).  "full_seq" reduces over the whole warm
+    # sequence instead: same zero overhead, still block-adaptive (every
+    # block's warm step recalibrates), robust for small models too.
+    calib_scope: str = "full_seq"    # "full_seq" | "active_block"
+
+
+class BAOSCalib(NamedTuple):
+    """Per-generation-block calibration. Shapes (B, 1, H_kv, D)."""
+    k_center: jax.Array
+    k_scale: jax.Array
+    v_center: jax.Array
+    v_scale: jax.Array
+
+
+def _calibrate_one(x: jax.Array, cfg: BAOSConfig,
+                   seq_mask: Optional[jax.Array] = None):
+    """x: (B, S, H, D) -> (center, scale) each (B, 1, H, D).
+
+    ``seq_mask`` (B, S) restricts calibration to e.g. the active block
+    (cfg.calib_scope handling is done by the caller via this mask).
+    """
+    xf = x.astype(jnp.float32)
+    if seq_mask is not None:
+        m = seq_mask[:, :, None, None].astype(jnp.float32)
+        big = jnp.float32(3.4e38)
+        xmax = jnp.max(jnp.where(m > 0, xf, -big), axis=1, keepdims=True)
+        xmin = jnp.min(jnp.where(m > 0, xf, big), axis=1, keepdims=True)
+        mean = jnp.sum(xf * m, axis=1, keepdims=True) / (
+            jnp.sum(m, axis=1, keepdims=True) + 1e-9)
+    else:
+        xmax = jnp.max(xf, axis=1, keepdims=True)
+        xmin = jnp.min(xf, axis=1, keepdims=True)
+        mean = jnp.mean(xf, axis=1, keepdims=True)
+
+    if cfg.variant == "mean":
+        center = mean
+    elif cfg.variant == "minmax":
+        center = 0.5 * (xmax + xmin)
+    else:
+        raise ValueError(f"unknown BAOS variant {cfg.variant!r}")
+
+    f = jnp.maximum(xmax - center, center - xmin)          # Eq. 8
+    f = jnp.maximum(f, cfg.eps)
+    f = f ** jnp.float32(cfg.alpha)                        # Eq. 9
+    return center, f
+
+
+def calibrate(k: jax.Array, v: jax.Array, cfg: BAOSConfig,
+              seq_mask: Optional[jax.Array] = None) -> BAOSCalib:
+    """Warm-step calibration from the freshly computed K/V (B, S, H, D)."""
+    kc, kf = _calibrate_one(k, cfg, seq_mask)
+    vc, vf = _calibrate_one(v, cfg, seq_mask)
+    return BAOSCalib(kc, kf, vc, vf)
+
+
+def identity_calib(batch: int, kv_heads: int, head_dim: int,
+                   dtype=jnp.float32) -> BAOSCalib:
+    z = jnp.zeros((batch, 1, kv_heads, head_dim), dtype)
+    o = jnp.ones((batch, 1, kv_heads, head_dim), dtype)
+    return BAOSCalib(z, o, z, o)
+
+
+def smooth_quantize(x: jax.Array, center: jax.Array, scale: jax.Array,
+                    cfg: BAOSConfig) -> jax.Array:
+    """(x - c)/f -> MX fake-quant (what gets written to the KV cache)."""
+    xs = (x.astype(jnp.float32) - center) / scale
+    if cfg.enabled:
+        xs = mx.mx_fake_quant(xs, cfg.kv_format)
+    return xs.astype(x.dtype)
+
+
+def smooth_quantize_kv(k: jax.Array, v: jax.Array, calib: BAOSCalib,
+                       cfg: BAOSConfig):
+    ks = smooth_quantize(k, calib.k_center, calib.k_scale, cfg)
+    vs = smooth_quantize(v, calib.v_center, calib.v_scale, cfg)
+    return ks, vs
+
+
+def scale_query(q: jax.Array, calib: BAOSCalib, num_q_heads: int) -> jax.Array:
+    """Fuse the inverse K-scale into Q (paper Fig. 8): Q_s = Q * f_k.
+
+    q: (B, Sq, Hq, D); f_k: (B, 1, Hkv, D), broadcast per GQA group.
+    """
+    f = calib.k_scale.astype(q.dtype)
+    hkv = f.shape[2]
+    group = num_q_heads // hkv
+    f = jnp.repeat(f, group, axis=2)
+    return q * f
+
+
+def correct_output(out_s: jax.Array, calib: BAOSCalib, num_q_heads: int
+                   ) -> jax.Array:
+    """Undo the V smoothing after attention: out = out_s * f_v + c_v."""
+    fv = calib.v_scale.astype(out_s.dtype)
+    cv = calib.v_center.astype(out_s.dtype)
+    hkv = fv.shape[2]
+    group = num_q_heads // hkv
+    fv = jnp.repeat(fv, group, axis=2)
+    cv = jnp.repeat(cv, group, axis=2)
+    return out_s * fv + cv
+
+
+def dequantize_kv(ks: jax.Array, vs: jax.Array, calib: BAOSCalib):
+    """Reference unsmoothing (used by oracles/tests, not the fused path)."""
+    k = ks.astype(jnp.float32) * calib.k_scale + calib.k_center
+    v = vs.astype(jnp.float32) * calib.v_scale + calib.v_center
+    return k.astype(ks.dtype), v.astype(vs.dtype)
+
+
+def outlier_channel_overlap(x_warm: jax.Array, x_refine: jax.Array,
+                            top_frac: float = 0.01) -> jax.Array:
+    """Paper §4.4.1 metric: fraction of top-|channel| indices shared between
+    the warm step and a refinement step (>70% in the paper's profiling)."""
+    def top_idx(x):
+        mag = jnp.mean(jnp.abs(x.astype(jnp.float32)), axis=(0, 1))  # (H, D)
+        flat = mag.reshape(-1)
+        k = max(1, int(flat.shape[0] * top_frac))
+        return jax.lax.top_k(flat, k)[1], k
+    iw, k = top_idx(x_warm)
+    ir, _ = top_idx(x_refine)
+    shared = jnp.sum(jnp.isin(iw, ir))
+    return shared / k

@@ -1,0 +1,220 @@
+"""Blocked diffusion inference + masked-diffusion training objective.
+
+Implements the full dLLM pipeline of paper §2 / Alg. 2 on top of any model
+exposing the `forward(params, tokens, cache, seg_start, ...)` contract:
+
+  * generation proceeds block-autoregressively over N_B blocks of length L;
+  * each block begins with a **warm step**: full-sequence bidirectional
+    forward that (re)computes KV for *all* positions, writes the smoothed/
+    quantized cache, and serves as the BAOS online-calibration point;
+  * T-1 **refinement steps** then run per cache mode:
+      - "dual":   process only the active block (KV replaced in place;
+                  suffix KV frozen from the warm step),
+      - "prefix": process block + suffix (fresh suffix KV each step),
+      - "none":   full-sequence recompute every step (Block Diffusion);
+  * each step ends with the Stable-Max sampling stage committing the top-k
+    most confident tokens of the active block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baos as baos_lib
+from repro.core import sampling as sampling_lib
+from repro.core import schedule as schedule_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionConfig:
+    gen_length: int = 128
+    block_length: int = 32
+    steps_per_block: int = 8
+    cache_mode: str = "dual"          # none | prefix | dual
+    sampling: sampling_lib.SamplingConfig = sampling_lib.SamplingConfig()
+    baos: baos_lib.BAOSConfig = baos_lib.BAOSConfig(enabled=False)
+
+    @property
+    def num_blocks(self) -> int:
+        assert self.gen_length % self.block_length == 0
+        return self.gen_length // self.block_length
+
+
+# ---------------------------------------------------------------------------
+# Inference
+# ---------------------------------------------------------------------------
+
+def _active_mask(batch: int, s_tot: int, block_start, block_len: int):
+    pos = jnp.arange(s_tot, dtype=jnp.int32)[None, :]
+    m = (pos >= block_start) & (pos < block_start + block_len)
+    return jnp.broadcast_to(m, (batch, s_tot))
+
+
+def warm_step(model, params, x: jax.Array, cache, block_start,
+              dcfg: DiffusionConfig, **fwd_kw):
+    """Full-sequence forward; returns (active-block logits, new cache)."""
+    B, s_tot = x.shape
+    L = dcfg.block_length
+    calib_mask = (_active_mask(B, s_tot, block_start, L)
+                  if dcfg.baos.calib_scope == "active_block" else None)
+    logits, cache, _ = model.forward(
+        params, tokens=x, cache=cache, seg_start=0,
+        baos_cfg=dcfg.baos, calibrate=True, calib_mask=calib_mask,
+        logits_slice=(block_start, L), **fwd_kw)
+    return logits, cache
+
+
+def refine_step(model, params, x: jax.Array, cache, block_start,
+                dcfg: DiffusionConfig, suffix_len: int = 0, **fwd_kw):
+    """One refinement forward (paper Fig. 4).
+
+    dual:   segment = active block (suffix_len = 0)
+    prefix: segment = active block + suffix (suffix_len = s_tot - end)
+    Returns (active-block logits, new cache).
+    """
+    L = dcfg.block_length
+    seg_len = L + suffix_len
+    seg = jax.lax.dynamic_slice_in_dim(x, block_start, seg_len, axis=1)
+    logits, cache, _ = model.forward(
+        params, tokens=seg, cache=cache, seg_start=block_start,
+        baos_cfg=dcfg.baos, calibrate=False,
+        logits_slice=(0, L), **fwd_kw)
+    return logits, cache
+
+
+def full_step(model, params, x: jax.Array, block_start,
+              dcfg: DiffusionConfig, **fwd_kw):
+    """Cache-free full recompute (Block Diffusion / cache_mode='none')."""
+    L = dcfg.block_length
+    logits, _, _ = model.forward(
+        params, tokens=x, cache=None, seg_start=0,
+        logits_slice=(block_start, L), **fwd_kw)
+    return logits
+
+
+def generate(model, params, prompt: jax.Array, dcfg: DiffusionConfig,
+             rng: Optional[jax.Array] = None, mask_id: Optional[int] = None,
+             jit_steps: bool = True, **fwd_kw) -> jax.Array:
+    """Blocked diffusion generation (paper Alg. 2 outer loops).
+
+    prompt: (B, P) int32.  Returns (B, P + gen_length) tokens.
+    """
+    cfg = model.cfg
+    mask_id = cfg.mask_id if mask_id is None else mask_id
+    B, P = prompt.shape
+    L, T = dcfg.block_length, dcfg.steps_per_block
+    s_tot = P + dcfg.gen_length
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    x = jnp.concatenate(
+        [prompt.astype(jnp.int32),
+         jnp.full((B, dcfg.gen_length), mask_id, jnp.int32)], axis=1)
+
+    use_cache = dcfg.cache_mode != "none"
+    cache = model.init_cache(B, s_tot) if use_cache else None
+
+    def sample(logits, x, bs, k, step_rng):
+        xa = jax.lax.dynamic_slice_in_dim(x, bs, L, axis=1)
+        xa_new, _ = sampling_lib.sampling_step(
+            logits, xa, mask_id, k, dcfg.sampling, step_rng)
+        return jax.lax.dynamic_update_slice_in_dim(x, xa_new, bs, axis=1)
+
+    warm_fn = functools.partial(warm_step, model, dcfg=dcfg, **fwd_kw)
+    full_fn = functools.partial(full_step, model, dcfg=dcfg, **fwd_kw)
+    if jit_steps:
+        warm_fn = jax.jit(warm_fn)
+        full_fn = jax.jit(full_fn)
+
+    refine_fns = {}
+
+    def get_refine(suffix_len):
+        if suffix_len not in refine_fns:
+            fn = functools.partial(refine_step, model, dcfg=dcfg,
+                                   suffix_len=suffix_len, **fwd_kw)
+            refine_fns[suffix_len] = jax.jit(fn) if jit_steps else fn
+        return refine_fns[suffix_len]
+
+    for nb in range(dcfg.num_blocks):
+        bs = P + nb * L
+        mask_count = jnp.full((B,), L, jnp.int32)
+        ks = schedule_lib.get_num_transfer_tokens(mask_count, T)  # (B, T)
+
+        for t in range(T):
+            rng, srng = jax.random.split(rng)
+            if not use_cache:
+                logits = full_fn(params, x, jnp.int32(bs))
+            elif t == 0:
+                logits, cache = warm_fn(params, x, cache, jnp.int32(bs))
+            else:
+                suffix = (s_tot - (bs + L)) if dcfg.cache_mode == "prefix" else 0
+                logits, cache = get_refine(suffix)(
+                    params, x, cache, jnp.int32(bs))
+            x = sample(logits, x, jnp.int32(bs), ks[:, t], srng)
+
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Training objective (LLaDA masked diffusion)
+# ---------------------------------------------------------------------------
+
+def forward_mask(rng: jax.Array, tokens: jax.Array, mask_id: int,
+                 eps: float = 1e-3):
+    """LLaDA forward process: t ~ U(eps, 1) per sequence, mask iid w.p. t."""
+    B, S = tokens.shape
+    r1, r2 = jax.random.split(rng)
+    t = jax.random.uniform(r1, (B, 1), minval=eps, maxval=1.0)
+    mask = jax.random.uniform(r2, (B, S)) < t
+    noisy = jnp.where(mask, mask_id, tokens)
+    return noisy, mask, t
+
+
+def masked_diffusion_loss(model, params, tokens: jax.Array, rng: jax.Array,
+                          quant=None, aux_weight: float = 0.0,
+                          valid: Optional[jax.Array] = None,
+                          loss_chunk: Optional[int] = None, **fwd_kw):
+    """LLaDA objective: E_t E_mask [ 1/t * sum_masked CE ] / (B*S).
+
+    ``loss_chunk``: compute the CE reduction in sequence chunks so the f32
+    upcast of the (B, S, V) logits is never materialized whole (§Perf
+    memory-term optimization for train cells)."""
+    cfg = model.cfg
+    noisy, mask, t = forward_mask(rng, tokens, cfg.mask_id)
+    logits, _, aux = model.forward(params, tokens=noisy, cache=None,
+                                   quant=quant, **fwd_kw)
+    if loss_chunk is not None and tokens.shape[1] % loss_chunk == 0:
+        S = tokens.shape[1]
+        nch = S // loss_chunk
+
+        def chunk_ce(c):
+            lg = jax.lax.dynamic_slice_in_dim(
+                logits, c * loss_chunk, loss_chunk, 1).astype(jnp.float32)
+            tk = jax.lax.dynamic_slice_in_dim(tokens, c * loss_chunk,
+                                              loss_chunk, 1)
+            lz = jax.nn.logsumexp(lg, axis=-1)
+            gd = jnp.take_along_axis(lg, tk[..., None], axis=-1)[..., 0]
+            return lz - gd
+
+        ce = jnp.concatenate([chunk_ce(c) for c in range(nch)], axis=1)
+    else:
+        lf = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, tokens[..., None], axis=-1)[..., 0]
+        ce = logz - gold
+    w = mask.astype(jnp.float32) / t
+    if valid is not None:
+        w = w * valid.astype(jnp.float32)
+    loss = jnp.sum(ce * w) / (tokens.shape[0] * tokens.shape[1])
+    if aux_weight:
+        loss = loss + aux_weight * aux
+    metrics = {
+        "loss": loss,
+        "ce_masked": jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1),
+        "mask_frac": jnp.mean(mask.astype(jnp.float32)),
+        "aux": aux,
+    }
+    return loss, metrics

@@ -1,0 +1,93 @@
+"""Packed MX storage: real int4/int8 code buffers + E8M0 scale bytes.
+
+Everywhere else in the repo MX quantization is emulated with fake-quant
+(bf16 values carrying quantization error) because the *accuracy* path needs
+dequantized numerics.  This module provides the *storage* path DART
+actually deploys: MXINT4 codes packed two-per-byte (uint8) plus one scale
+exponent byte per 32-block — 4.25 bits/element vs 16 for bf16, a 3.76x
+HBM-capacity/traffic reduction for the KV cache and weights.
+
+Round-trip guarantee: unpack(pack(x)) == mx_fake_quant(x) bit-exactly, so
+the packed cache can replace the emulated one without accuracy change.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mx
+
+
+class PackedMX(NamedTuple):
+    codes: jax.Array      # uint8; int4: two codes/byte along the last axis
+    exponents: jax.Array  # uint8 E8M0 biased exponents, one per 32-block
+    fmt_name: str
+    orig_last: int        # unpadded size of the last axis
+
+    @property
+    def nbytes(self) -> int:
+        return self.codes.size * 1 + self.exponents.size * 1
+
+
+def _block_codes(x: jax.Array, fmt: mx.MXFormat, block: int):
+    """-> (int codes (..., nb, block), biased exponents (..., nb))."""
+    xb, _ = mx._blockize(x.astype(jnp.float32), block)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = mx._shared_scale(amax, fmt)
+    q = mx._quant_element(xb / scale, fmt)          # grid values
+    codes = jnp.round(q * (2.0 ** fmt.frac_bits)).astype(jnp.int8)
+    exp = jnp.round(jnp.log2(scale[..., 0])).astype(jnp.int32) + 127
+    return codes, exp.astype(jnp.uint8)
+
+
+def pack(x: jax.Array, fmt_name: str = "mxint4", block: int = 32
+         ) -> PackedMX:
+    fmt = mx.FORMATS[fmt_name]
+    assert fmt.is_int, "packed storage implemented for MXINT formats"
+    codes, exp = _block_codes(x, fmt, block)
+    flat = codes.reshape(*codes.shape[:-2], -1)     # (..., nb*block)
+    if fmt.element_bits == 4:
+        lo = flat[..., 0::2] & 0xF
+        hi = flat[..., 1::2] & 0xF
+        packed = (lo | (hi << 4)).astype(jnp.uint8)
+    else:
+        packed = flat.astype(jnp.int8).view(jnp.uint8)
+    return PackedMX(packed, exp, fmt_name, x.shape[-1])
+
+
+def unpack(p: PackedMX, block: int = 32, dtype=jnp.float32) -> jax.Array:
+    fmt = mx.FORMATS[p.fmt_name]
+    if fmt.element_bits == 4:
+        lo = (p.codes & 0xF).astype(jnp.int8)
+        hi = ((p.codes >> 4) & 0xF).astype(jnp.int8)
+        # sign-extend 4-bit two's complement
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        flat = jnp.stack([lo, hi], axis=-1).reshape(*p.codes.shape[:-1], -1)
+    else:
+        flat = p.codes.view(jnp.int8)
+    nb = p.exponents.shape[-1]
+    vals = flat.reshape(*flat.shape[:-1], nb, block).astype(jnp.float32)
+    vals = vals * (2.0 ** -fmt.frac_bits)
+    scale = jnp.exp2(p.exponents.astype(jnp.float32) - 127.0)[..., None]
+    out = (vals * scale).reshape(*flat.shape[:-1], nb * block)
+    return out[..., :p.orig_last].astype(dtype)
+
+
+def packed_bytes(shape: Tuple[int, ...], fmt_name: str = "mxint4",
+                 block: int = 32) -> int:
+    fmt = mx.FORMATS[fmt_name]
+    n = 1
+    for s in shape:
+        n *= s
+    nb = -(-shape[-1] // block) * (n // shape[-1])
+    return n * fmt.element_bits // 8 + nb
+
+
+def compression_ratio(shape, fmt_name="mxint4", baseline_bytes=2):
+    n = 1
+    for s in shape:
+        n *= s
+    return n * baseline_bytes / packed_bytes(shape, fmt_name)

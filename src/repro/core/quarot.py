@@ -1,0 +1,53 @@
+"""QuaRot-style Hadamard-rotation KV smoothing (baseline, Ashkboos et al. 24).
+
+The paper compares BAOS against rotation-based smoothing adapted to blocked
+dLLM inference (Table 5).  A random-sign Hadamard rotation R (orthogonal)
+is applied along the head dimension before quantization:
+
+    K_r = K R,   Q_r = Q R     =>   Q_r K_rᵀ = Q Kᵀ   (exactly)
+    V_r = V R,   out = (P V_r) Rᵀ
+
+spreading channel outliers across all channels.  Unlike BAOS it is *static*:
+one rotation for all diffusion steps, so step-wise distribution shift is not
+tracked — which is exactly the weakness Table 5 exposes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mx
+
+
+@functools.lru_cache(maxsize=16)
+def hadamard_matrix(dim: int, seed: int = 0) -> np.ndarray:
+    """Sylvester Hadamard (dim must be a power of two) with random signs."""
+    assert dim & (dim - 1) == 0, f"head_dim {dim} must be a power of 2"
+    h = np.array([[1.0]])
+    while h.shape[0] < dim:
+        h = np.block([[h, h], [h, -h]])
+    rng = np.random.RandomState(seed)
+    signs = rng.choice([-1.0, 1.0], size=dim)
+    return (h * signs) / np.sqrt(dim)
+
+
+def rotate(x: jax.Array, seed: int = 0) -> jax.Array:
+    """Rotate along the trailing head-dim axis."""
+    r = jnp.asarray(hadamard_matrix(x.shape[-1], seed), x.dtype)
+    return x @ r
+
+
+def unrotate(x: jax.Array, seed: int = 0) -> jax.Array:
+    r = jnp.asarray(hadamard_matrix(x.shape[-1], seed), x.dtype)
+    return x @ r.T
+
+
+def quarot_quantize_kv(k: jax.Array, v: jax.Array, fmt: str = "mxint4",
+                       seed: int = 0):
+    """Rotate then MX fake-quant (the cached representation)."""
+    kq = mx.mx_fake_quant(rotate(k, seed), fmt)
+    vq = mx.mx_fake_quant(rotate(v, seed), fmt)
+    return kq, vq

@@ -1,0 +1,175 @@
+"""Diffusion sampling stage (paper §3.2, Alg. 2) in JAX.
+
+Per masked position, over the vocabulary logit vector z in R^V:
+
+  Stable-Max (Eq. 3):  m = max_i z_i,  i* = argmax_i z_i,
+                       conf = softmax(z)[i*] = 1 / sum_j exp(z_j - m)
+
+followed by a top-k over positions (V_TOPK_MASK) and an integer masked
+commit (V_SELECT_INT == jnp.where).  The full probability vector is *never*
+materialized — that is the paper's core sampling insight and what the Pallas
+kernel (kernels/stablemax_sampling.py) implements with VMEM chunking.
+
+This module provides
+  * the pure-jnp reference used as the kernels' oracle,
+  * the *vocab-sharded* combine used under the production mesh (model-axis
+    sharded LM head -> per-shard (m, idx, S) triples merged with one tiny
+    collective; the cross-chip analogue of the paper's V_chunk streaming),
+  * the position-level top-k transfer mask and token commit.
+
+Sampling precision (paper Fig. 1 / §6.1: FP64 -> BF16 -> MXFP8) is emulated
+by fake-quantizing the logits to ``fmt`` before the reductions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mx
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    fmt: str = "mxfp8_e4m3"     # sampling precision: bf16 | mxfp8_e4m3 | none
+    temperature: float = 0.0     # 0 => greedy (LLaDA reference)
+    strategy: str = "stablemax"  # "stablemax" (low-confidence) | "random"
+    suppress_mask_token: bool = True  # never sample the mask id itself
+
+
+# ---------------------------------------------------------------------------
+# Stable-Max confidence + argmax (reference; oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def stable_max(logits: jax.Array, fmt: str = "none",
+               rng: Optional[jax.Array] = None, temperature: float = 0.0,
+               suppress_id: Optional[int] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """logits (..., V) -> (confidence (...), token (...) int32).
+
+    With temperature > 0, tokens are Gumbel-max sampled and the confidence is
+    the (un-tempered) softmax probability of the sampled token, matching the
+    LLaDA reference sampler.  ``suppress_id`` excludes one token (the mask
+    id) from the reductions *after* quantization — the hardware analogue is
+    the comparator skipping that index, so the -inf must never enter the MX
+    block scaling (it would zero its 31 neighbours).
+    """
+    z = mx.mx_fake_quant(logits, fmt).astype(jnp.float32)
+    if suppress_id is not None:
+        v = z.shape[-1]
+        z = jnp.where(jnp.arange(v) == suppress_id, NEG_INF, z)
+    m = jnp.max(z, axis=-1)
+    s = jnp.sum(jnp.exp(z - m[..., None]), axis=-1)
+    if temperature > 0.0 and rng is not None:
+        g = jax.random.gumbel(rng, z.shape, jnp.float32)
+        idx = jnp.argmax(z / temperature + g, axis=-1).astype(jnp.int32)
+        z_at = jnp.take_along_axis(z, idx[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        conf = jnp.exp(z_at - m) / s
+    else:
+        idx = jnp.argmax(z, axis=-1).astype(jnp.int32)
+        conf = 1.0 / s                      # numerator e^0 = 1 (Eq. 3)
+    return conf, idx
+
+
+def stable_max_two_pass(logits: jax.Array, fmt: str = "none"):
+    """Paper-faithful phase structure: pass 1 = V_RED_MAX_IDX, pass 2 =
+    V_EXP_V + V_RED_SUM, then S_RECIP.  Numerically identical to
+    ``stable_max``; kept separate because the analytical model charges it
+    2x logit reads (the beyond-paper single-pass kernel reads once)."""
+    z = mx.mx_fake_quant(logits, fmt).astype(jnp.float32)
+    m = jnp.max(z, axis=-1)                          # pass 1a
+    idx = jnp.argmax(z, axis=-1).astype(jnp.int32)   # pass 1b (fused max+idx)
+    s = jnp.sum(jnp.exp(z - m[..., None]), axis=-1)  # pass 2
+    return 1.0 / s, idx
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded combine (runs inside shard_map; axis 'model' shards V)
+# ---------------------------------------------------------------------------
+
+def local_partials(logits_shard: jax.Array, fmt: str = "none"):
+    """Per-shard partials: (m_l, idx_l, s_l) with s_l relative to m_l."""
+    z = mx.mx_fake_quant(logits_shard, fmt).astype(jnp.float32)
+    m = jnp.max(z, axis=-1)
+    idx = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    s = jnp.sum(jnp.exp(z - m[..., None]), axis=-1)
+    return m, idx, s
+
+
+def sharded_stable_max(logits_shard: jax.Array, axis_name: str,
+                       fmt: str = "none") -> Tuple[jax.Array, jax.Array]:
+    """Stable-Max over a vocab axis sharded on ``axis_name``.
+
+    Combine rule (DESIGN.md §7.2):  m = max_i m_i,
+    S = sum_i S_i * exp(m_i - m), idx from the shard owning the global max
+    (lowest shard index breaks ties).  One pmax + one psum + one pmin of
+    scalars per position — O(V/n_shards) logit traffic per chip.
+    """
+    shard = jax.lax.axis_index(axis_name)
+    vloc = logits_shard.shape[-1]
+    m, idx, s = local_partials(logits_shard, fmt)
+    gidx = idx + shard * vloc
+    gm = jax.lax.pmax(m, axis_name)
+    gs = jax.lax.psum(s * jnp.exp(m - gm), axis_name)
+    big = jnp.int32(2 ** 30)
+    cand = jnp.where(m >= gm, gidx, big)
+    gi = jax.lax.pmin(cand, axis_name)
+    return 1.0 / gs, gi.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Position-level top-k transfer mask (V_TOPK_MASK) + commit (V_SELECT_INT)
+# ---------------------------------------------------------------------------
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def topk_transfer_mask(conf: jax.Array, mask_idx: jax.Array,
+                       k: jax.Array) -> jax.Array:
+    """conf (B, L) float; mask_idx (B, L) bool (True = still masked);
+    k (B,) int32 -> transfer mask (B, L) bool with exactly min(k, #masked)
+    True entries per row, at the highest-confidence masked positions."""
+    c = jnp.where(mask_idx, conf.astype(jnp.float32), NEG_INF)
+    order = jnp.argsort(-c, axis=-1)                 # descending
+    rank = jnp.argsort(order, axis=-1)               # rank of each position
+    take = jnp.minimum(k[:, None], jnp.sum(mask_idx, axis=-1, keepdims=True))
+    return (rank < take) & mask_idx
+
+
+def commit_tokens(x: jax.Array, x0: jax.Array, transfer: jax.Array
+                  ) -> jax.Array:
+    """Phase 4 integer masked update: commit sampled tokens where selected."""
+    return jnp.where(transfer, x0, x)
+
+
+def sampling_step(logits: jax.Array, x: jax.Array, mask_id: int,
+                  k: jax.Array, cfg: SamplingConfig,
+                  rng: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """One full sampling stage (Alg. 2 phases 1-4) for the active block.
+
+    logits (B, L, V), x (B, L) current tokens, k (B,) tokens to unmask.
+    Returns (new tokens (B, L), transfer mask (B, L)).
+    """
+    m_idx = x == mask_id
+    sup = mask_id if cfg.suppress_mask_token else None
+    conf, x0 = stable_max(logits, cfg.fmt, rng, cfg.temperature,
+                          suppress_id=sup)
+    if cfg.strategy == "random":
+        conf = jax.random.uniform(
+            rng if rng is not None else jax.random.PRNGKey(0), conf.shape)
+    x0 = jnp.where(m_idx, x0, x)                 # keep committed tokens
+    transfer = topk_transfer_mask(conf, m_idx, k)
+    return commit_tokens(x, x0, transfer), transfer
+
+
+def full_softmax_reference(logits: jax.Array):
+    """The naive Eq. 2 path (materializes the V-wide probability vector);
+    used only to validate Stable-Max equivalence in tests."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    idx = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    conf = jnp.take_along_axis(p, idx[..., None], axis=-1)[..., 0]
+    return conf, idx

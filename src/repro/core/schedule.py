@@ -1,0 +1,23 @@
+"""Transfer-token schedules for diffusion unmasking (LLaDA Alg. / paper Alg. 2).
+
+``get_num_transfer_tokens`` splits the number of currently-masked positions
+of the active block evenly over the remaining denoising steps, pushing the
+remainder to the earliest steps (LLaDA reference behaviour).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def get_num_transfer_tokens(mask_count: jax.Array, steps: int) -> jax.Array:
+    """mask_count: (B,) int32 masked positions -> (B, steps) tokens/step."""
+    base = mask_count[:, None] // steps
+    rem = mask_count[:, None] % steps
+    step_idx = jnp.arange(steps)[None, :]
+    return (base + (step_idx < rem).astype(base.dtype)).astype(jnp.int32)
+
+
+def linear_unmask_schedule(block_len: int, steps: int) -> jax.Array:
+    """Static schedule for a fully-masked block of ``block_len``."""
+    return get_num_transfer_tokens(jnp.array([block_len], jnp.int32), steps)[0]

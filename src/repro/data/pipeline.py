@@ -1,0 +1,104 @@
+"""Data pipeline: deterministic synthetic corpus + host-side prefetch.
+
+No external datasets ship with the container, so the pipeline synthesizes a
+structured token stream (a mixture of Zipf-distributed unigrams and copy /
+arithmetic-pattern spans) that a small dLLM can measurably learn — enough
+for the end-to-end training example and loss-goes-down tests.  The iterator
+is shardable (each host slices its batch rows) and double-buffered.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    pattern_frac: float = 0.5   # fraction of copy-pattern spans
+    zipf_a: float = 1.2
+
+
+class SyntheticCorpus:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._rng = np.random.RandomState(cfg.seed)
+
+    def _zipf_tokens(self, rng, n: int) -> np.ndarray:
+        v = self.cfg.vocab - 2  # reserve top ids (mask token etc.)
+        z = rng.zipf(self.cfg.zipf_a, size=n)
+        return np.minimum(z - 1, v - 1).astype(np.int32)
+
+    def batch(self, step: int) -> np.ndarray:
+        cfg = self.cfg
+        rng = np.random.RandomState((cfg.seed, step))
+        x = self._zipf_tokens(rng, cfg.global_batch * cfg.seq_len)
+        x = x.reshape(cfg.global_batch, cfg.seq_len)
+        # learnable structure: periodic copy spans  a b c a b c ...
+        n_pat = int(cfg.global_batch * cfg.pattern_frac)
+        if n_pat:
+            period = 8
+            motif = rng.randint(0, cfg.vocab - 2,
+                                size=(n_pat, period)).astype(np.int32)
+            reps = int(np.ceil(cfg.seq_len / period))
+            x[:n_pat] = np.tile(motif, (1, reps))[:, :cfg.seq_len]
+        return x
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def motif_pool_batch(step: int, *, pool_key: int = 42, n_motifs: int = 4,
+                     period: int = 4, batch: int = 16, seq_len: int = 64,
+                     vocab: int = 257):
+    """Periodic sequences drawn from a fixed motif pool — the standard tiny
+    end-task used by tests/benchmarks: the model must read the context to
+    identify the motif, then continue it (learnable by a 2-layer smoke
+    model in a few hundred steps)."""
+    import jax
+    import jax.numpy as jnp
+    pool = jax.random.randint(jax.random.PRNGKey(pool_key),
+                              (n_motifs, period), 0, vocab - 2)
+    r = jax.random.fold_in(jax.random.PRNGKey(11), step)
+    ids = jax.random.randint(r, (batch,), 0, n_motifs)
+    return jnp.tile(pool[ids], (1, seq_len // period))
+
+
+class Prefetcher:
+    """Host-side double buffering (overlaps data synth with device step)."""
+
+    def __init__(self, it: Iterator[np.ndarray], depth: int = 2):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._it = it
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        for item in self._it:
+            if self._stop.is_set():
+                return
+            self._q.put(item)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,69 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (kernels execute via the Pallas
+interpreter for correctness validation) and False on TPU (compiled
+Mosaic).  Model code selects kernels vs XLA reference via config flags;
+the dry-run lowers the XLA path (Pallas cannot lower for TPU from a CPU
+host), which is recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import baos_mx_quant as _bq
+from repro.kernels import flash_bidir as _fb
+from repro.kernels import stablemax_sampling as _ss
+from repro.kernels import topk_mask as _tk
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_sampling(logits: jax.Array, suppress_id: Optional[int] = None,
+                   tile_r: int = 8, chunk_v: int = 512,
+                   interpret: Optional[bool] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """logits (..., V) -> (conf (...), idx (...)).  Flattens leading dims."""
+    interp = _default_interpret() if interpret is None else interpret
+    batch_shape = logits.shape[:-1]
+    V = logits.shape[-1]
+    flat = logits.reshape(-1, V)
+    conf, idx = _ss.stablemax_sampling(
+        flat, tile_r=tile_r, chunk_v=min(chunk_v, V),
+        suppress_id=suppress_id, interpret=interp)
+    return conf.reshape(batch_shape), idx.reshape(batch_shape)
+
+
+def transfer_mask(conf: jax.Array, mask: jax.Array, k: jax.Array,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """conf/mask (B, L), k (B,) -> bool transfer mask (B, L)."""
+    interp = _default_interpret() if interpret is None else interpret
+    out = _tk.topk_mask(conf, mask.astype(jnp.int32), k, interpret=interp)
+    return out.astype(bool)
+
+
+def baos_quantize(x: jax.Array, center: jax.Array, scale: jax.Array,
+                  fmt_name: str = "mxint4",
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """x (B, S, H, D) + calib (B, 1, H, D) -> smoothed fake-quant cache."""
+    interp = _default_interpret() if interpret is None else interpret
+    B, S, H, D = x.shape
+    xg = x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    c = center.transpose(0, 2, 1, 3).reshape(B * H, 1, D)
+    f = scale.transpose(0, 2, 1, 3).reshape(B * H, 1, D)
+    out = _bq.baos_mx_quant(xg, c, f, fmt_name=fmt_name, interpret=interp)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def flash_attention(q, k, v, fk=None, fv=None, cv=None,
+                    window: Optional[int] = None,
+                    bq: int = 128, bk: int = 512,
+                    interpret: Optional[bool] = None):
+    """Bidirectional flash attention with optional BAOS fusion."""
+    interp = _default_interpret() if interpret is None else interpret
+    return _fb.flash_bidir(q, k, v, fk, fv, cv, bq=bq, bk=bk,
+                           window=window, interpret=interp)

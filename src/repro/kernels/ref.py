@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the accuracy ground truth)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baos as baos_lib
+from repro.core import mx as mx_lib
+from repro.core import sampling as sampling_lib
+
+
+def stablemax_sampling_ref(logits: jax.Array,
+                           suppress_id: Optional[int] = None
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """(R, V) -> (conf (R,), idx (R,)); mirrors core.sampling.stable_max."""
+    return sampling_lib.stable_max(logits, "none", suppress_id=suppress_id)
+
+
+def topk_mask_ref(conf: jax.Array, mask: jax.Array, k: jax.Array
+                  ) -> jax.Array:
+    return sampling_lib.topk_transfer_mask(
+        conf, mask.astype(bool), k).astype(jnp.int32)
+
+
+def baos_mx_quant_ref(x: jax.Array, center: jax.Array, scale: jax.Array,
+                      fmt_name: str = "mxint4", block: int = 32) -> jax.Array:
+    """x (G, S, D); center/scale (G, 1, D)."""
+    xs = (x.astype(jnp.float32) - center) / scale
+    return mx_lib.mx_fake_quant(xs, fmt_name, block).astype(x.dtype)
+
+
+def flash_bidir_ref(q, k, v, fk=None, fv=None, cv=None, window=None):
+    """Dense bidirectional attention with BAOS corrections."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32)
+    if fk is not None:
+        qf = qf * jnp.repeat(fk[:, None], G, axis=2).astype(jnp.float32)
+    qg = qf.reshape(B, Sq, Hkv, G, D) * (D ** -0.5)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    if window is not None:
+        qp = jnp.arange(Sq)[:, None]
+        kp = jnp.arange(Skv)[None, :]
+        bias = jnp.where(jnp.abs(qp - kp) < window, 0.0, -1e30)
+        s = s + bias[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    o = o.reshape(B, Sq, Hq, D)
+    if fv is not None:
+        o = o * jnp.repeat(fv[:, None], G, axis=2)
+    if cv is not None:
+        o = o + jnp.repeat(cv[:, None], G, axis=2)
+    return o.astype(q.dtype)

@@ -1,0 +1,100 @@
+"""Fused Stable-Max sampling kernel (paper §3.2 -> TPU Pallas).
+
+DART's sampling engine decomposes Eq. 3 into four ISA primitives
+(V_RED_MAX_IDX, V_EXP_V, V_RED_SUM, S_RECIP) executed in phases over
+vocab chunks streamed HBM -> Vector SRAM.  The TPU adaptation fuses all of
+them into ONE pass over the logits: each grid step loads a
+(TILE_R x CHUNK_V) block into VMEM and updates per-row running
+(max m, argmax i, exp-sum s) scratch with the online-softmax rescaling
+
+    m' = max(m, m_c);  s' = s * e^(m - m') + sum_j e^(z_j - m')
+
+so the logits are read from HBM exactly once (the paper's engine reads them
+twice: max pass + exp-sum pass).  This is the "beyond-paper single-pass"
+optimization recorded in EXPERIMENTS.md §Perf; the analytical model charges
+the paper-faithful variant 2x reads.
+
+Grid: (rows / TILE_R, V / CHUNK_V), vocab innermost so scratch carries
+across chunks.  Outputs: confidence (rows,) f32 and argmax index (rows,)
+i32 — the L-sized FP/Int "domains" of the paper, written once at the final
+chunk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30  # python float: pallas kernels cannot capture array constants
+
+
+def _kernel(z_ref, conf_ref, idx_ref, m_sc, s_sc, i_sc, *,
+            chunk_v: int, n_chunks: int, suppress_id: Optional[int]):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc[...], NEG)
+        s_sc[...] = jnp.zeros_like(s_sc[...])
+        i_sc[...] = jnp.zeros_like(i_sc[...])
+
+    z = z_ref[...].astype(jnp.float32)                   # (TILE_R, CHUNK_V)
+    col = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1) + c * chunk_v
+    if suppress_id is not None:
+        z = jnp.where(col == suppress_id, NEG, z)
+
+    local_m = jnp.max(z, axis=-1)                        # V_RED_MAX
+    # first-occurrence argmax (matches jnp.argmax tie-breaking)
+    big = jnp.int32(2 ** 30)
+    local_i = jnp.min(jnp.where(z >= local_m[:, None], col, big), axis=-1)
+
+    m_old, s_old, i_old = m_sc[...], s_sc[...], i_sc[...]
+    m_new = jnp.maximum(m_old, local_m)
+    s_new = s_old * jnp.exp(m_old - m_new) + \
+        jnp.sum(jnp.exp(z - m_new[:, None]), axis=-1)    # V_EXP_V + V_RED_SUM
+    i_new = jnp.where(local_m > m_old, local_i, i_old)
+
+    m_sc[...], s_sc[...], i_sc[...] = m_new, s_new, i_new
+
+    @pl.when(c == n_chunks - 1)
+    def _fin():
+        conf_ref[...] = 1.0 / s_new                      # S_RECIP
+        idx_ref[...] = i_new
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "chunk_v",
+                                             "suppress_id", "interpret"))
+def stablemax_sampling(logits: jax.Array, *, tile_r: int = 8,
+                       chunk_v: int = 512,
+                       suppress_id: Optional[int] = None,
+                       interpret: bool = False
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """logits (R, V) -> (conf (R,) f32, idx (R,) i32).  Pads R and V."""
+    R, V = logits.shape
+    pad_r = (-R) % tile_r
+    pad_v = (-V) % chunk_v
+    if pad_r or pad_v:
+        logits = jnp.pad(logits, ((0, pad_r), (0, pad_v)),
+                         constant_values=NEG)
+    Rp, Vp = logits.shape
+    n_chunks = Vp // chunk_v
+
+    conf, idx = pl.pallas_call(
+        functools.partial(_kernel, chunk_v=chunk_v, n_chunks=n_chunks,
+                          suppress_id=suppress_id),
+        grid=(Rp // tile_r, n_chunks),
+        in_specs=[pl.BlockSpec((tile_r, chunk_v), lambda r, c: (r, c))],
+        out_specs=[pl.BlockSpec((tile_r,), lambda r, c: (r,)),
+                   pl.BlockSpec((tile_r,), lambda r, c: (r,))],
+        out_shape=[jax.ShapeDtypeStruct((Rp,), jnp.float32),
+                   jax.ShapeDtypeStruct((Rp,), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((tile_r,), jnp.float32),
+                        pltpu.VMEM((tile_r,), jnp.float32),
+                        pltpu.VMEM((tile_r,), jnp.int32)],
+        interpret=interpret,
+    )(logits)
+    return conf[:R], idx[:R]

@@ -1,0 +1,356 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. binds the logical sharding rules for the arch,
+  3. jit-lowers the step function against ShapeDtypeStruct inputs
+     (weak-type-correct, shardable, no allocation),
+  4. compiles, and records memory_analysis / cost_analysis / the collective
+     schedule parsed from the optimized HLO,
+  5. derives the three roofline terms (EXPERIMENTS.md §Roofline):
+       compute    = FLOPs / (chips * 197e12)        [TPU v5e-class bf16]
+       memory     = bytes / (chips * 819e9)
+       collective = collective_bytes / (chips * 50e9)
+     cost_analysis() is per-device (the SPMD module), so per-device values
+     divide by single-chip peaks directly.
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json; EXPERIMENTS.md
+tables are generated from these by benchmarks/roofline_report.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod both] [--skip-existing]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import sharding as shlib
+from repro.configs import base as configs
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as launch_sharding
+from repro.launch import steps as steps_lib
+from repro.models.registry import build_model
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"= \(?[\w\[\],{}\s/#*]*\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str):
+    """Sum result-shape bytes of every collective op (per-device program).
+
+    Result bytes >= operand bytes for every collective kind, so this is a
+    conservative per-chip traffic proxy; async -done ops are skipped to
+    avoid double counting.
+    """
+    per_kind = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split("(")[0]
+        tot = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+        per_kind.setdefault(kind, [0, 0.0])
+        per_kind[kind][0] += 1
+        per_kind[kind][1] += tot
+    total = sum(v[1] for v in per_kind.values())
+    return total, {k: {"count": v[0], "bytes": v[1]}
+                   for k, v in per_kind.items()}
+
+
+def with_depth(cfg, k: int):
+    """Depth-reduced clone (same widths) for per-layer cost extrapolation.
+
+    XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count, so scanned-layer models under-report flops/bytes/collectives.
+    We compile k=1 and k=2 and extrapolate: cost(L) = c1 + (L-1)*(c2-c1) —
+    exact because every layer has identical cost.  ``k`` counts scan trips:
+    layers for dense/ssm, triples for the hybrid.
+    """
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, n_layers=3 * k + 2,
+                                   unroll_layers=True)
+    if cfg.family == "audio":
+        return dataclasses.replace(cfg, n_layers=k, n_encoder_layers=k,
+                                   unroll_layers=True)
+    return dataclasses.replace(cfg, n_layers=k, unroll_layers=True)
+
+
+def depth_count(cfg) -> int:
+    """Scan trip count of the full config."""
+    if cfg.family == "hybrid":
+        return cfg.n_layers // 3
+    return cfg.n_layers
+
+
+def _cell_costs(cfg, shape, mesh, policy=None):
+    """(flops, bytes, collective_bytes) per device for one compile."""
+    from repro.launch import steps as steps_lib
+    model = build_model(cfg)
+    specs = steps_lib.input_specs(model, shape, policy)
+    shardings = steps_lib.input_shardings(model, shape, mesh, specs, policy)
+    step_fn, arg_names = steps_lib.build_step(model, shape, policy)
+    jitted = jax.jit(step_fn,
+                     in_shardings=tuple(shardings[a] for a in arg_names))
+    compiled = jitted.lower(*[specs[a] for a in arg_names]).compile()
+    cost = compiled.cost_analysis() or {}
+    coll, coll_detail = parse_collectives(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll, coll_detail)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N_active*D (inference)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch * shape.block_length
+
+
+VARIANTS = {
+    # §Perf hillclimb variants: config / policy overrides per cell
+    "baseline": {},
+    "bf16score": {"cfg": {"score_dtype": "bfloat16"}},
+    "split": {"policy": {"split_cache": True}},
+    "split_bf16": {"policy": {"split_cache": True},
+                   "cfg": {"score_dtype": "bfloat16"}},
+    "losschunk": {"policy": {"loss_chunk": 512}},
+    "losschunk_bf16": {"policy": {"loss_chunk": 512},
+                       "cfg": {"score_dtype": "bfloat16"}},
+    "remat": {"cfg": {"remat": "dots"}},
+    "remat_bf16": {"cfg": {"remat": "dots", "score_dtype": "bfloat16"}},
+    "bigchunk": {"cfg": {"attn_chunk": 4096}},
+    # pad attention heads to a multiple of |model| so the KV cache shards
+    # by head instead of by sequence (zero-padded heads are dead weight:
+    # +33% attention params for minicpm, but no cache resharding)
+    "padheads48": {"cfg": {"n_heads": 48, "n_kv_heads": 48}},
+    "padheads48_split_bf16": {"cfg": {"n_heads": 48, "n_kv_heads": 48,
+                                      "score_dtype": "bfloat16"},
+                              "policy": {"split_cache": True}},
+    "split_losschunk_bf16": {"policy": {"split_cache": True,
+                                        "loss_chunk": 512},
+                             "cfg": {"score_dtype": "bfloat16"}},
+    # ablation: the naive single-global-group MoE dispatch (O(global
+    # tokens) replicated buffers) — the pre-fix baseline
+    "moe_global": {"moe": {"group_dispatch": False}},
+    # head padding for GQA archs with 8/16-divisible group preservation:
+    # llama3.2-3b 24q/8kv -> 48q/16kv keeps G=3 (padded heads dead)
+    "padheads_g3": {"cfg": {"n_heads": 48, "n_kv_heads": 16}},
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             donate: bool = True, variant: str = "baseline") -> dict:
+    from repro.launch import steps as steps_mod
+    overrides = VARIANTS[variant]
+    cfg = configs.get_config(arch)
+    if overrides.get("cfg"):
+        cfg = dataclasses.replace(cfg, **overrides["cfg"])
+    if overrides.get("moe") and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, **overrides["moe"]))
+    policy = steps_mod.ServePolicy(**overrides.get("policy", {}))
+    shape = configs.SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    rules = launch_sharding.make_rules(cfg, mesh)
+    model = build_model(cfg)
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "multi_pod": multi_pod, "kind": shape.kind,
+        "chips": int(np.prod(mesh.devices.shape)),
+        "status": "error",
+    }
+    t0 = time.time()
+    with shlib.use_context(mesh, rules):
+        specs = steps_lib.input_specs(model, shape, policy)
+        shardings = steps_lib.input_shardings(model, shape, mesh, specs,
+                                              policy)
+        step_fn, arg_names = steps_lib.build_step(model, shape, policy)
+        in_shardings = tuple(shardings[a] for a in arg_names)
+        args = tuple(specs[a] for a in arg_names)
+        donate_args = ()
+        if donate:
+            donate_args = tuple(
+                i for i, a in enumerate(arg_names)
+                if a in ("opt_state", "cache", "x"))
+        jitted = jax.jit(step_fn, in_shardings=in_shardings,
+                         donate_argnums=donate_args)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # CPU backend may not implement it
+            mem_rec = {"error": str(e)}
+
+        hlo = compiled.as_text()
+        coll_bytes_raw, coll_detail = parse_collectives(hlo)
+
+        flops_raw = float(cost.get("flops", 0.0))
+        bytes_raw = float(cost.get("bytes accessed", 0.0))
+        chips = rec["chips"]
+
+        # -- while-loop cost correction (see with_depth docstring) ---------
+        f1, b1, c1, _ = _cell_costs(with_depth(cfg, 1), shape, mesh, policy)
+        f2, b2, c2, cd2 = _cell_costs(with_depth(cfg, 2), shape, mesh,
+                                      policy)
+        L = depth_count(cfg)
+        flops = f1 + (L - 1) * (f2 - f1)
+        bytes_acc = b1 + (L - 1) * (b2 - b1)
+        coll_bytes = c1 + (L - 1) * (c2 - c1)
+        # guard against pathological extrapolation
+        flops = max(flops, flops_raw)
+        bytes_acc = max(bytes_acc, bytes_raw)
+        coll_bytes = max(coll_bytes, coll_bytes_raw)
+
+        # params-per-device (from shardings; analytic, no allocation)
+        def sharded_bytes(tree, shard_tree):
+            tot = 0
+            for sds, sh in zip(jax.tree.leaves(tree),
+                               jax.tree.leaves(
+                                   shard_tree,
+                                   is_leaf=lambda x: isinstance(
+                                       x, jax.sharding.NamedSharding))):
+                n = int(np.prod(sds.shape)) if sds.shape else 1
+                shards = int(np.prod([
+                    mesh.shape[a] for axes in sh.spec if axes is not None
+                    for a in ((axes,) if isinstance(axes, str) else axes)]))
+                tot += n * sds.dtype.itemsize / max(shards, 1)
+            return tot
+
+        param_bytes_dev = sharded_bytes(specs["params"], shardings["params"])
+        cache_bytes_dev = (sharded_bytes(specs["cache"], shardings["cache"])
+                           if "cache" in specs else 0.0)
+
+        mf = model_flops(cfg, shape)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "flops_per_device": flops,
+            "bytes_per_device": bytes_acc,
+            "collective_bytes_per_device": coll_bytes,
+            "raw_uncorrected": {"flops": flops_raw, "bytes": bytes_raw,
+                                "collective_bytes": coll_bytes_raw},
+            "collectives": coll_detail,
+            "memory_analysis": mem_rec,
+            "param_bytes_per_device": param_bytes_dev,
+            "cache_bytes_per_device": cache_bytes_dev,
+            "roofline": {
+                "compute_s": flops / PEAK_FLOPS,
+                "memory_s": bytes_acc / HBM_BW,
+                "collective_s": coll_bytes / ICI_BW,
+            },
+            "model_flops_global": mf,
+            "useful_flops_ratio": (mf / (flops * chips)) if flops else None,
+        })
+        terms = rec["roofline"]
+        rec["bottleneck"] = max(terms, key=terms.get)
+    return rec
+
+
+def cells(multi_pod_mode: str):
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[multi_pod_mode]
+    for arch in configs.list_archs():
+        cfg = configs.get_config(arch)
+        for shape in configs.applicable_shapes(cfg):
+            for mp in pods:
+                yield arch, shape, mp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--assigned-only", action="store_true",
+                    help="skip the extra paper models (llada-*)")
+    ap.add_argument("--variant", default="baseline",
+                    choices=sorted(VARIANTS))
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    todo = list(cells(args.multi_pod)) if args.all else [
+        (args.arch, args.shape, args.multi_pod != "single")]
+
+    for arch, shape, mp in todo:
+        if args.assigned_only and arch.startswith("llada"):
+            continue
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        if args.variant != "baseline":
+            tag += f"__{args.variant}"
+        out = RESULTS / f"{tag}.json"
+        if args.skip_existing and out.exists():
+            ok = json.loads(out.read_text()).get("status") == "ok"
+            if ok:
+                print(f"[skip] {tag}")
+                continue
+        print(f"[run ] {tag}", flush=True)
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape, mp, variant=args.variant)
+        except Exception:
+            rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                   "status": "error", "traceback": traceback.format_exc()}
+        rec["wall_s"] = round(time.time() - t0, 2)
+        out.write_text(json.dumps(rec, indent=2, default=float))
+        print(f"[done] {tag}: {rec['status']} ({rec['wall_s']}s) "
+              f"bottleneck={rec.get('bottleneck')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips.  Multi-pod adds a leading
+"pod" axis: (pod=2, data=16, model=16) = 512 chips.  Defined as functions so
+importing this module never touches jax device state (the dry-run sets
+XLA_FLAGS *before* any jax init; tests see 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU integration tests (requires host device count)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,60 @@
+"""Logical-axis -> mesh-axis rules for the production meshes.
+
+The binding is computed per (arch, mesh):
+
+  * batch           -> (pod, data)         [DP everywhere]
+  * vocab/heads/mlp -> model               [TP: Megatron column/row pattern
+                                            emerges from the param specs]
+  * experts         -> model when divisible (EP); otherwise the expert FFN
+                       hidden dim takes the model axis (expert-TP)
+  * KV cache        -> kv_heads on model when H_kv divides |model| (head-
+                       parallel cache), else kv_seq on model (context-
+                       parallel cache — the GQA small-H_kv case)
+
+`repro.sharding.spec_for` drops any mapping that does not divide the
+concrete dim and deduplicates mesh axes per tensor, so one rule set serves
+every (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro import sharding as shlib
+from repro.models.transformer import ModelConfig
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh) -> Dict[str, object]:
+    model_ax = "model" if "model" in mesh.axis_names else None
+    batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    msize = mesh.shape[model_ax] if model_ax else 1
+
+    head_parallel_cache = cfg.n_kv_heads % msize == 0 if msize > 1 else True
+    rules: Dict[str, object] = {
+        "batch": batch_ax if len(batch_ax) != 1 else batch_ax[0],
+        "seq": None,
+        "embed": None,
+        "vocab": model_ax,
+        "heads": model_ax,
+        "mlp": model_ax,
+        "experts": model_ax,
+        "layers": None,
+        "head_dim": None,
+        "kv_heads": model_ax if head_parallel_cache else None,
+        "kv_seq": None if head_parallel_cache else model_ax,
+    }
+    return rules
+
+
+def tree_shardings(spec_tree, shape_tree, mesh: Mesh):
+    """Map (logical-spec tree, ShapeDtypeStruct tree) -> NamedSharding tree."""
+    def one(spec, shp):
+        return NamedSharding(mesh, shlib.spec_for(spec, shp.shape))
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, jax.sharding.PartitionSpec())

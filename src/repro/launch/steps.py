@@ -1,0 +1,249 @@
+"""Step builders: one jit-able function per (arch x shape-kind), plus
+ShapeDtypeStruct input specs and NamedSharding trees for the dry-run and
+the real drivers.
+
+Kinds:
+  train   -> full train_step: LLaDA masked-diffusion loss, grads, AdamW.
+  prefill -> warm step: full-sequence bidirectional forward, BAOS
+             calibration, smoothed/quantized KV cache write, block logits.
+  decode  -> serve_step: ONE dual-cache refinement of the active block
+             against the full KV cache + Stable-Max sampling + top-k commit
+             (the dLLM analogue of "one new token with a seq_len cache").
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shlib
+from repro.configs.base import ShapeConfig
+from repro.core import baos as baos_lib
+from repro.core import diffusion
+from repro.core import sampling as sampling_lib
+from repro.launch import sharding as launch_sharding
+from repro.models.transformer import ModelConfig
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePolicy:
+    cache_mode: str = "dual"
+    baos: baos_lib.BAOSConfig = baos_lib.BAOSConfig(
+        enabled=True, kv_format="mxint4")
+    sampling: sampling_lib.SamplingConfig = sampling_lib.SamplingConfig(
+        fmt="mxfp8_e4m3")
+    steps_per_block: int = 8
+    split_cache: bool = False     # §Perf: replicated active-block KV buffer
+    loss_chunk: int = 0           # §Perf: chunked CE reduction (train)
+
+
+def make_dcfg(cfg: ModelConfig, shape: ShapeConfig,
+              policy: ServePolicy) -> diffusion.DiffusionConfig:
+    return diffusion.DiffusionConfig(
+        gen_length=shape.block_length, block_length=shape.block_length,
+        steps_per_block=policy.steps_per_block, cache_mode=policy.cache_mode,
+        sampling=policy.sampling, baos=policy.baos)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _extra_inputs(model, cfg: ModelConfig, batch: int, kind: str
+                  ) -> Dict[str, Any]:
+    """Stub-frontend inputs (paper-assigned [audio]/[vlm] handling)."""
+    ex: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        if kind in ("train", "prefill"):
+            ex["audio_embeds"] = _sds((batch, cfg.n_audio_ctx, cfg.d_model),
+                                      jnp.bfloat16)
+        else:
+            kv = (cfg.n_layers, batch, cfg.n_audio_ctx, cfg.n_kv_heads,
+                  cfg.d_head)
+            ex["cross_kv"] = (_sds(kv, cfg.jdtype), _sds(kv, cfg.jdtype))
+    if cfg.family == "vlm" and kind in ("train", "prefill"):
+        ex["image_embeds"] = _sds((batch, cfg.n_image_tokens, cfg.d_model),
+                                  jnp.bfloat16)
+    return ex
+
+
+def _extra_shardings(ex, mesh):
+    def spec(x):
+        if isinstance(x, tuple):
+            return tuple(spec(e) for e in x)
+        names = ("batch",) + (None,) * (len(x.shape) - 1)
+        if len(x.shape) == 5:   # stacked cross-kv
+            names = ("layers", "batch", None, "kv_heads", "head_dim")
+        return jax.sharding.NamedSharding(mesh,
+                                          shlib.spec_for(names, x.shape))
+    return {k: spec(v) for k, v in ex.items()}
+
+
+def _fwd_extras(model, cfg, extras, kind):
+    """Turn extra *inputs* into forward kwargs inside the step."""
+    kw = {}
+    if cfg.family == "audio":
+        if kind in ("train", "prefill"):
+            enc = model.encode(extras["params_ref"], extras["audio_embeds"])
+            kw["cross_kv"] = model.cross_kv(extras["params_ref"], enc)
+        else:
+            kw["cross_kv"] = extras["cross_kv"]
+    if cfg.family == "vlm" and kind in ("train", "prefill"):
+        kw["image_embeds"] = extras["image_embeds"]
+    return kw
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def build_train_step(model, opt_cfg: adamw.OptConfig,
+                     aux_weight: float = 0.01,
+                     policy: Optional[ServePolicy] = None):
+    cfg = model.cfg
+    loss_chunk = policy.loss_chunk if policy and policy.loss_chunk else None
+
+    def train_step(params, opt_state, tokens, seed, extras):
+        rng = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+
+        def loss_fn(p):
+            ex = dict(extras)
+            ex["params_ref"] = p
+            kw = _fwd_extras(model, cfg, ex, "train")
+            valid = None
+            if cfg.family == "vlm" and cfg.n_image_tokens:
+                pos = jnp.arange(tokens.shape[1])
+                valid = jnp.broadcast_to(pos >= cfg.n_image_tokens,
+                                         tokens.shape)
+            loss, metrics = diffusion.masked_diffusion_loss(
+                model, p, tokens, rng,
+                aux_weight=aux_weight if cfg.moe is not None else 0.0,
+                valid=valid, loss_chunk=loss_chunk, **kw)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_state, stats = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        return new_params, new_state, {**metrics, **stats}
+
+    return train_step
+
+
+def build_prefill_step(model, dcfg: diffusion.DiffusionConfig):
+    cfg = model.cfg
+
+    def prefill_step(params, x, cache, block_start, extras):
+        ex = dict(extras)
+        ex["params_ref"] = params
+        kw = _fwd_extras(model, cfg, ex, "prefill")
+        logits, cache = diffusion.warm_step(
+            model, params, x, cache, block_start, dcfg, **kw)
+        return logits, cache
+
+    return prefill_step
+
+
+def build_serve_step(model, dcfg: diffusion.DiffusionConfig):
+    cfg = model.cfg
+    L = dcfg.block_length
+
+    def serve_step(params, x, cache, block_start, k, seed, extras):
+        ex = dict(extras)
+        ex["params_ref"] = params
+        kw = _fwd_extras(model, cfg, ex, "decode")
+        rng = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+        logits, cache = diffusion.refine_step(
+            model, params, x, cache, block_start, dcfg, **kw)
+        xa = jax.lax.dynamic_slice_in_dim(x, block_start, L, axis=1)
+        xa, _ = sampling_lib.sampling_step(
+            logits, xa, cfg.mask_id, k, dcfg.sampling, rng)
+        x = jax.lax.dynamic_update_slice_in_dim(x, xa, block_start, axis=1)
+        return x, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs + shardings per (arch, shape)
+# ---------------------------------------------------------------------------
+
+def input_specs(model, shape: ShapeConfig,
+                policy: Optional[ServePolicy] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every step input (no allocation)."""
+    cfg = model.cfg
+    act_len = (shape.block_length
+               if (policy and policy.split_cache and shape.kind != "train")
+               else None)
+    B, S = shape.global_batch, shape.seq_len
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(model.init, key)
+    specs: Dict[str, Any] = {"params": params}
+    extras = _extra_inputs(model, cfg, B, shape.kind)
+
+    if shape.kind == "train":
+        specs["opt_state"] = jax.eval_shape(adamw.init_state, params)
+        specs["tokens"] = _sds((B, S), jnp.int32)
+        specs["seed"] = _sds((), jnp.uint32)
+    else:
+        specs["x"] = _sds((B, S), jnp.int32)
+        specs["cache"] = jax.eval_shape(
+            functools.partial(model.init_cache, B, S, act_len))
+        specs["block_start"] = _sds((), jnp.int32)
+        if shape.kind == "decode":
+            specs["k"] = _sds((B,), jnp.int32)
+            specs["seed"] = _sds((), jnp.uint32)
+    specs["extras"] = extras
+    return specs
+
+
+def input_shardings(model, shape: ShapeConfig, mesh,
+                    specs: Dict[str, Any],
+                    policy: Optional[ServePolicy] = None) -> Dict[str, Any]:
+    cfg = model.cfg
+    act_len = (shape.block_length
+               if (policy and policy.split_cache and shape.kind != "train")
+               else None)
+    rep = launch_sharding.replicated(mesh)
+    out: Dict[str, Any] = {
+        "params": launch_sharding.tree_shardings(
+            model.param_specs(), specs["params"], mesh)}
+    tok = jax.sharding.NamedSharding(
+        mesh, shlib.spec_for(("batch", "seq"),
+                             (shape.global_batch, shape.seq_len)))
+    if shape.kind == "train":
+        out["opt_state"] = {
+            "m": out["params"], "v": out["params"], "step": rep}
+        out["tokens"] = tok
+        out["seed"] = rep
+    else:
+        out["x"] = tok
+        out["cache"] = launch_sharding.tree_shardings(
+            model.cache_specs(act_len), specs["cache"], mesh)
+        out["block_start"] = rep
+        if shape.kind == "decode":
+            out["k"] = jax.sharding.NamedSharding(
+                mesh, shlib.spec_for(("batch",), (shape.global_batch,)))
+            out["seed"] = rep
+    out["extras"] = _extra_shardings(specs["extras"], mesh)
+    return out
+
+
+def build_step(model, shape: ShapeConfig, policy: Optional[ServePolicy] = None,
+               opt_cfg: Optional[adamw.OptConfig] = None):
+    """Returns (step_fn, ordered arg names) for the shape kind."""
+    policy = policy or ServePolicy()
+    if shape.kind == "train":
+        fn = build_train_step(model, opt_cfg or adamw.OptConfig(),
+                              policy=policy)
+        return fn, ("params", "opt_state", "tokens", "seed", "extras")
+    dcfg = make_dcfg(model.cfg, shape, policy)
+    if shape.kind == "prefill":
+        return build_prefill_step(model, dcfg), \
+            ("params", "x", "cache", "block_start", "extras")
+    fn = build_serve_step(model, dcfg)
+    return fn, ("params", "x", "cache", "block_start", "k", "seed", "extras")

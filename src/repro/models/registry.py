@@ -1,0 +1,56 @@
+"""Model registry: family -> Model class with the shared contract.
+
+Every model exposes:
+    cfg                          ModelConfig
+    init(key) -> params
+    param_specs() -> pytree of logical-axis tuples (matches params)
+    init_cache(batch, s_tot) -> cache pytree
+    cache_specs() -> pytree of logical-axis tuples (matches cache)
+    forward(params, tokens, *, cache, seg_start, baos_cfg, calibrate,
+            calib_mask, quant, kv_valid, logits_slice, ...) ->
+        (logits, new_cache, aux_loss)
+"""
+from __future__ import annotations
+
+from repro.models import transformer
+from repro.models.transformer import ModelConfig
+
+
+class TransformerModel:
+    """Dense / MoE dLLM (also the VLM/audio text-decoder base)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return transformer.init_params(key, self.cfg)
+
+    def param_specs(self):
+        return transformer.param_specs(self.cfg)
+
+    def init_cache(self, batch: int, s_tot: int, act_len=None):
+        return transformer.init_cache(self.cfg, batch, s_tot, act_len)
+
+    def cache_specs(self, act_len=None):
+        return transformer.cache_specs(self.cfg, act_len)
+
+    def forward(self, params, tokens=None, **kw):
+        return transformer.forward(params, self.cfg, tokens, **kw)
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        return TransformerModel(cfg)
+    if cfg.family == "ssm":
+        from repro.models.ssm import MambaModel
+        return MambaModel(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.rglru import GriffinModel
+        return GriffinModel(cfg)
+    if cfg.family == "audio":
+        from repro.models.whisper import WhisperModel
+        return WhisperModel(cfg)
+    if cfg.family == "vlm":
+        from repro.models.vlm import VLMModel
+        return VLMModel(cfg)
+    raise ValueError(f"unknown model family {cfg.family!r}")

@@ -1,0 +1,320 @@
+"""Mamba2 (SSD — state-space duality) backbone in JAX.
+
+Chunked SSD algorithm (Dao & Gu 2024, Listing 1): within-chunk quadratic
+("attention-like") term + inter-chunk linear recurrence over chunk states.
+Attention-free: there is no KV cache.  For blocked diffusion the analogue of
+the paper's warm step is a full recompute that also *checkpoints the SSM
+state at the active-block boundary*; refinement steps replay only the active
+block from that state (causal SSM ⇒ suffix tokens cannot influence the
+active block, so dual- and prefix-cache modes coincide — DESIGN.md §4).
+
+BAOS inapplicability: there is no KV to quantize.  As a noted extension the
+same warm-step calibration is applied to the *state* checkpoint before MX
+quantization (cfg.baos reused), since the state plays the cache's role.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.core import baos as baos_lib
+from repro.core import mx
+from repro.models import layers
+from repro.models.transformer import ModelConfig, _norm_params, _norm_specs, \
+    _apply_norm
+
+# SSD chunk length: must divide every segment length fed to the model
+# (configs keep prompts/blocks multiples of this).
+SSD_CHUNK = 16
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., l) -> (..., l, l) lower-triangular pairwise sums
+    segsum[i, j] = sum_{k=j+1..i} a_k for i >= j, else -inf."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, h0: Optional[jax.Array] = None,
+                chunk: int = SSD_CHUNK):
+    """SSD scan.  x: (b,s,h,p), dt: (b,s,h), A: (h,), B,C: (b,s,g,n).
+
+    Returns (y (b,s,h,p), chunk_states (b,nc+1,h,p,n)) where
+    chunk_states[:, i] is the state at the *start* of chunk i (position i*Q),
+    enabling block-boundary state capture for blocked diffusion.
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, f"seq {s} not a multiple of ssd chunk {chunk}"
+    nc = s // chunk
+    rep = h // g
+
+    xd = (x * dt[..., None]).astype(jnp.float32)          # (b,s,h,p)
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)   # (b,s,h,n)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    a = (A[None, None, :] * dt).astype(jnp.float32)       # (b,s,h) = A*dt (<0)
+
+    # chunked views (b, nc, Q, ...)
+    def ch(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+    xc, Bc, Cc, ac = ch(xd), ch(Bh), ch(Ch), ch(a)
+    ac_h = ac.transpose(0, 1, 3, 2)                       # (b,nc,h,Q)
+
+    # ---- intra-chunk (quadratic) term --------------------------------------
+    Lmat = jnp.exp(_segsum(ac_h))                         # (b,nc,h,Q,Q)
+    y_intra = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp",
+                         Cc, Bc, Lmat, xc)
+
+    # ---- chunk states -------------------------------------------------------
+    cum = jnp.cumsum(ac_h, axis=-1)                       # (b,nc,h,Q)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)           # (b,nc,h,Q)
+    S_c = jnp.einsum("bcshn,bchs,bcshp->bchpn", Bc, decay_to_end, xc)
+
+    # ---- inter-chunk recurrence --------------------------------------------
+    chunk_decay = jnp.exp(cum[..., -1])                   # (b,nc,h)
+
+    def body(state, inp):
+        s_c, d_c = inp
+        new = state * d_c[..., None, None] + s_c
+        return new, state                                  # emit state at start
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    final, starts = jax.lax.scan(
+        body, init, (S_c.transpose(1, 0, 2, 3, 4),
+                     chunk_decay.transpose(1, 0, 2)))
+    starts = starts.transpose(1, 0, 2, 3, 4)              # (b,nc,h,p,n)
+    all_states = jnp.concatenate([starts, final[:, None]], axis=1)
+
+    decay_from_start = jnp.exp(cum)                       # (b,nc,h,Q)
+    y_inter = jnp.einsum("bclhn,bchpn,bchl->bclhp",
+                         Cc, starts, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, all_states
+
+
+def ssd_ref(x, dt, A, B, C, h0=None):
+    """Sequential reference recurrence (oracle for tests)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xd = (x * dt[..., None]).astype(jnp.float32)
+    a = jnp.exp((A[None, None, :] * dt).astype(jnp.float32))
+
+    def step(hprev, t):
+        hnew = hprev * a[:, t][..., None, None] + \
+            xd[:, t][..., None] * Bh[:, t][..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", hnew, Ch[:, t])
+        return hnew, y
+    h0 = jnp.zeros((b, h, p, n), jnp.float32) if h0 is None else h0
+    _, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block + model
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    headdim = cfg.ssm_head_dim
+    nheads = d_inner // headdim
+    ngroups = 1
+    d_state = cfg.ssm_state
+    conv_dim = d_inner + 2 * ngroups * d_state
+    return d_inner, headdim, nheads, ngroups, d_state, conv_dim
+
+
+def init_mamba_layer(key, cfg: ModelConfig):
+    d_inner, hp, nh, ng, dn, conv_dim = _mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    d_in_proj = 2 * d_inner + 2 * ng * dn + nh
+    dt = cfg.jdtype
+    return {
+        "norm": _norm_params(cfg.d_model, cfg.norm, dt),
+        "in_proj": layers.dense_init(ks[0], cfg.d_model, d_in_proj, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim))
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": _norm_params(d_inner, "rms", dt),
+        "out_proj": layers.dense_init(ks[2], d_inner, cfg.d_model, dt),
+    }
+
+
+def mamba_layer_specs(cfg: ModelConfig):
+    return {
+        "norm": _norm_specs(cfg.norm),
+        "in_proj": ("embed", "mlp"), "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",), "A_log": (None,), "D": (None,),
+        "dt_bias": (None,), "gate_norm": {"w": ("mlp",)},
+        "out_proj": ("mlp", "embed"),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv, width W.  xbc: (B, S, C); w: (W, C).
+    conv_state: (B, W-1, C) trailing inputs from the previous segment."""
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None, :]
+              for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return jax.nn.silu(out + b[None, None, :]), new_state
+
+
+def mamba_block(x: jax.Array, lp, cfg: ModelConfig,
+                h0: Optional[jax.Array] = None,
+                conv_state: Optional[jax.Array] = None,
+                chunk: int = SSD_CHUNK,
+                capture_at: Optional[jax.Array] = None):
+    """x: (B, S, d_model) -> (y, chunk_states, conv_state_at_capture).
+
+    ``capture_at``: position at which to snapshot the trailing W-1 pre-conv
+    rows (the conv state an active-block replay needs).
+    """
+    d_inner, hp, nh, ng, dn, conv_dim = _mamba_dims(cfg)
+    B_, S, _ = x.shape
+    W = cfg.conv_width
+    zxbcdt = layers.qdot(x, lp["in_proj"], None)
+    z, xbc_raw, dtv = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    conv_capture = None
+    if capture_at is not None:
+        start = jnp.maximum(capture_at - (W - 1), 0)
+        conv_capture = jax.lax.dynamic_slice_in_dim(
+            xbc_raw, start, W - 1, axis=1)
+        conv_capture = jnp.where(capture_at >= W - 1, conv_capture, 0.0)
+    xbc, _ = _causal_conv(xbc_raw, lp["conv_w"], lp["conv_b"], conv_state)
+    xs, Bv, Cv = jnp.split(xbc, [d_inner, d_inner + ng * dn], axis=-1)
+    xs = xs.reshape(B_, S, nh, hp)
+    Bv = Bv.reshape(B_, S, ng, dn)
+    Cv = Cv.reshape(B_, S, ng, dn)
+    dt = jax.nn.softplus(dtv.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    y, states = ssd_chunked(xs, dt, A, Bv, Cv, h0, chunk)
+    y = y + lp["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B_, S, d_inner).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), lp["gate_norm"]["w"], cfg.norm_eps)
+    return layers.qdot(y, lp["out_proj"], None), states, conv_capture
+
+
+class MambaModel:
+    """Mamba2 dLLM backbone with the transformer-compatible forward contract."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.chunk = SSD_CHUNK
+
+    def init(self, key):
+        cfg = self.cfg
+        ke, kl, kh = jax.random.split(key, 3)
+        lkeys = jax.random.split(kl, cfg.n_layers)
+        return {
+            "embed": layers.embed_init(ke, cfg.vocab, cfg.d_model, cfg.jdtype),
+            "layers": jax.vmap(lambda k: init_mamba_layer(k, cfg))(lkeys),
+            "final_norm": _norm_params(cfg.d_model, cfg.norm, cfg.jdtype),
+            "lm_head": layers.dense_init(kh, cfg.d_model, cfg.vocab, cfg.jdtype),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        def stack(tree):
+            return jax.tree.map(lambda s: ("layers",) + s, tree,
+                                is_leaf=lambda x: isinstance(x, tuple))
+        return {
+            "embed": ("vocab", "embed"),
+            "layers": stack(mamba_layer_specs(cfg)),
+            "final_norm": _norm_specs(cfg.norm),
+            "lm_head": ("embed", "vocab"),
+        }
+
+    def init_cache(self, batch: int, s_tot: int, act_len=None):
+        # act_len (split attention cache) is inapplicable: no KV cache
+        cfg = self.cfg
+        d_inner, hp, nh, ng, dn, conv_dim = _mamba_dims(cfg)
+        return {
+            "state": jnp.zeros((cfg.n_layers, batch, nh, hp, dn), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1,
+                               conv_dim), cfg.jdtype),
+        }
+
+    def cache_specs(self, act_len=None):
+        return {"state": ("layers", "batch", "heads", None, None),
+                "conv": ("layers", "batch", None, "mlp")}
+
+    def forward(self, params, tokens=None, *, embeds=None, cache=None,
+                seg_start=0, baos_cfg=None, calibrate=False, calib_mask=None,
+                quant=None, kv_valid=None, logits_slice=None, **_):
+        cfg = self.cfg
+        if embeds is None:
+            embeds = params["embed"][tokens] * cfg.embed_scale
+        x = embeds.astype(cfg.jdtype)
+        x = sharding.shard(x, "batch", "seq", "embed")
+
+        warm = calibrate and cache is not None
+        capture_at = (logits_slice[0] if (warm and logits_slice is not None)
+                      else 0)
+        capture_chunk = capture_at // self.chunk if warm else 0
+
+        def layer_fn(carry, xs):
+            x, = carry
+            lp, lcache = xs
+            h = _apply_norm(x, lp["norm"], cfg)
+            if cache is None:
+                y, _, _ = mamba_block(h, lp, cfg, None, None, self.chunk)
+                new_lcache = 0
+            elif warm:
+                y, states, conv0 = mamba_block(
+                    h, lp, cfg, None, None, self.chunk,
+                    capture_at=jnp.asarray(capture_at, jnp.int32))
+                s0 = jax.lax.dynamic_index_in_dim(
+                    states, capture_chunk, axis=1, keepdims=False)
+                if baos_cfg is not None and baos_cfg.enabled:
+                    s0 = mx.mx_fake_quant(s0, baos_cfg.kv_format)
+                new_lcache = {"state": s0,
+                              "conv": conv0.astype(lcache["conv"].dtype)}
+            else:
+                y, _, _ = mamba_block(h, lp, cfg, lcache["state"],
+                                      lcache["conv"], self.chunk)
+                new_lcache = lcache
+            return (x + y,), new_lcache
+
+        if cfg.unroll_layers:
+            new_caches = []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda t: t[i], params["layers"])
+                lc = (jax.tree.map(lambda t: t[i], cache)
+                      if cache is not None else None)
+                (x,), nlc = layer_fn((x,), (lp, lc))
+                new_caches.append(nlc)
+            new_cache = (jax.tree.map(lambda *ls: jnp.stack(ls), *new_caches)
+                         if cache is not None else None)
+        else:
+            (x,), new_cache = jax.lax.scan(
+                layer_fn, (x,), (params["layers"], cache))
+        x = _apply_norm(x, params["final_norm"], cfg)
+        if logits_slice is not None:
+            start, length = logits_slice
+            x = jax.lax.dynamic_slice_in_dim(x, start, length, axis=1)
+        logits = layers.qdot(x, params["lm_head"], quant) * cfg.logit_scale
+        logits = sharding.shard(logits, "batch", "seq", "vocab")
+        if cache is None:
+            new_cache = None
+        return logits, new_cache, jnp.float32(0)

@@ -1,0 +1,49 @@
+"""InternVL2-style VLM: stub ViT frontend + dense LM backbone.
+
+The vision tower is a STUB per the assignment: ``input_specs()`` supplies
+precomputed patch embeddings (B, n_image_tokens, d_model) already projected
+to the LM width.  The sequence layout reserves the first ``n_image_tokens``
+positions as image placeholders; any *full-sequence* pass (train, warm step,
+cache-free step) overwrites their embeddings with the image embeddings.
+Refinement segments always start past the image prefix, so the text-only
+path applies unchanged — blocked diffusion, BAOS, and the sampling engine
+work exactly as for a dense LM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.transformer import ModelConfig
+
+
+class VLMModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return transformer.init_params(key, self.cfg)
+
+    def param_specs(self):
+        return transformer.param_specs(self.cfg)
+
+    def init_cache(self, batch: int, s_tot: int, act_len=None):
+        return transformer.init_cache(self.cfg, batch, s_tot, act_len)
+
+    def cache_specs(self, act_len=None):
+        return transformer.cache_specs(self.cfg, act_len)
+
+    def forward(self, params, tokens=None, *, image_embeds=None,
+                embeds=None, **kw):
+        cfg = self.cfg
+        if embeds is None and tokens is not None:
+            embeds = params["embed"][tokens] * cfg.embed_scale
+            n_img = cfg.n_image_tokens
+            if image_embeds is not None and embeds.shape[1] >= n_img > 0:
+                # full-sequence pass: splice the stub ViT output over the
+                # reserved placeholder positions (static slice).
+                embeds = jnp.concatenate(
+                    [image_embeds.astype(embeds.dtype),
+                     embeds[:, n_img:]], axis=1)
+        return transformer.forward(params, cfg, None, embeds=embeds, **kw)

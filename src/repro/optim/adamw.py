@@ -1,0 +1,83 @@
+"""AdamW + LR schedules (incl. MiniCPM's WSD) + global-norm clipping.
+
+Pure-JAX (no optax): state is a pytree {m, v, step}; `apply_updates` is
+jit-friendly and shards like the params (m/v inherit param specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    clip_norm: float = 1.0
+    schedule: str = "wsd"        # wsd | cosine | const
+    warmup_steps: int = 100
+    stable_steps: int = 800
+    decay_steps: int = 100
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "const":
+        return cfg.lr * warm
+    if cfg.schedule == "cosine":
+        total = cfg.warmup_steps + cfg.stable_steps + cfg.decay_steps
+        t = jnp.clip((s - cfg.warmup_steps) /
+                     jnp.maximum(total - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+    # WSD (MiniCPM): warmup -> stable -> exponential-ish decay tail
+    decay_start = cfg.warmup_steps + cfg.stable_steps
+    t = jnp.clip((s - decay_start) / jnp.maximum(cfg.decay_steps, 1), 0.0, 1.0)
+    decay = cfg.min_lr_ratio ** t
+    return cfg.lr * warm * jnp.where(s < decay_start, 1.0, decay)
+
+
+def init_state(params) -> Dict[str, Any]:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state, cfg: OptConfig
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    lr = schedule_lr(step, cfg)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                     state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

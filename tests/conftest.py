@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run sets its own flags in
+# a separate process).  Force determinism-friendly settings.
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_prng_impl", "threefry2x32")

@@ -1,0 +1,115 @@
+"""BAOS identities and calibration invariants (core/baos.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baos as baos_lib
+from repro.kernels import ref as kref
+
+
+def _kv(seed, B=2, S=16, H=2, D=32, outliers=True):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (B, S, H, D))
+    if outliers:
+        boost = jnp.ones((D,)).at[jnp.arange(0, D, 8)].set(15.0)
+        x = x * boost
+    return x
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from(["mean", "minmax"]),
+       st.floats(0.3, 1.0))
+def test_attention_invariance_exact(seed, variant, alpha):
+    """With quantization OFF, BAOS smoothing + Q-fusion + output correction
+    is numerically exact (center cancellation + scale identity)."""
+    k, v = _kv(seed), _kv(seed + 1)
+    q = jax.random.normal(jax.random.PRNGKey(seed + 2), (2, 4, 4, 32)) * 0.3
+    cfg = baos_lib.BAOSConfig(enabled=False, variant=variant, alpha=alpha)
+    cal = baos_lib.calibrate(k, v, cfg)
+    ks, vs = baos_lib.smooth_quantize_kv(k, v, cal, cfg)   # no quant
+    ref_o = kref.flash_bidir_ref(q, k, v)
+    out = kref.flash_bidir_ref(q, ks, vs, fk=cal.k_scale[:, 0],
+                               fv=cal.v_scale[:, 0], cv=cal.v_center[:, 0])
+    np.testing.assert_allclose(out, ref_o, rtol=2e-4, atol=2e-5)
+
+
+def test_smoothing_flattens_outliers():
+    """After (x-c)/f the per-channel dynamic range is ~uniform."""
+    k = _kv(0, S=64)
+    cfg = baos_lib.BAOSConfig(enabled=False, variant="minmax")
+    cal = baos_lib.calibrate(k, k, cfg)
+    ks = (k - cal.k_center) / cal.k_scale
+    chan_amax = jnp.max(jnp.abs(ks), axis=1)     # (B, H, D)
+    assert float(chan_amax.max()) <= 1.0 + 1e-4
+    assert float(chan_amax.min()) >= 0.5         # minmax maps range to [-1,1]
+
+
+def test_quantized_better_than_naive():
+    """Naive per-block int4 lets outlier channels set the block scale and
+    crushes the resolution of their 31 neighbours; BAOS flattens channels
+    first.  The advantage is measured on the NON-outlier channels (the
+    outliers themselves quantize fine either way and dominate the plain
+    norm)."""
+    from repro.core import mx
+    k = _kv(0, S=64)                     # outliers at channels 0,8,16,24
+    out_idx = jnp.arange(0, 32, 8)
+    keep = jnp.ones((32,), bool).at[out_idx].set(False)
+    cfg = baos_lib.BAOSConfig(enabled=True, variant="minmax",
+                              kv_format="mxint4")
+    cal = baos_lib.calibrate(k, k, cfg)
+    ks, _ = baos_lib.smooth_quantize_kv(k, k, cal, cfg)
+    krec = ks * cal.k_scale + cal.k_center
+    naive = mx.mx_fake_quant(k, "mxint4")
+
+    def err(rec):
+        d = (rec - k)[..., keep]
+        return float(jnp.linalg.norm(d) / jnp.linalg.norm(k[..., keep]))
+
+    err_baos, err_naive = err(krec), err(naive)
+    assert err_baos < 0.5 * err_naive, (err_baos, err_naive)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_alpha_power_compresses_scale_range(seed):
+    k = _kv(seed, S=32)
+    cfg1 = baos_lib.BAOSConfig(variant="mean", alpha=1.0)
+    cfg6 = baos_lib.BAOSConfig(variant="mean", alpha=0.6)
+    f1 = baos_lib.calibrate(k, k, cfg1).k_scale
+    f6 = baos_lib.calibrate(k, k, cfg6).k_scale
+    spread1 = float(jnp.log(f1.max() / f1.min()))
+    spread6 = float(jnp.log(f6.max() / f6.min()))
+    assert spread6 < spread1 + 1e-6     # Eq. 9: dynamic range compressed
+
+
+def test_calib_mask_restricts_scope():
+    k = _kv(0, S=32)
+    big = k.at[:, 16:].mul(100.0)       # huge values outside active block
+    mask = jnp.zeros((2, 32), bool).at[:, :16].set(True)
+    cfg = baos_lib.BAOSConfig(variant="minmax")
+    cal_masked = baos_lib.calibrate(big, big, cfg, seq_mask=mask)
+    cal_front = baos_lib.calibrate(big[:, :16], big[:, :16], cfg)
+    np.testing.assert_allclose(cal_masked.k_scale, cal_front.k_scale,
+                               rtol=1e-6)
+
+
+def test_outlier_overlap_metric():
+    k0 = _kv(0, S=32)
+    ov_same = float(baos_lib.outlier_channel_overlap(k0, k0))
+    assert ov_same == 1.0
+    k1 = _kv(123, outliers=False)
+    ov_diff = float(baos_lib.outlier_channel_overlap(k0, k1))
+    assert ov_diff <= ov_same
+
+
+def test_gqa_broadcast():
+    """Q-scale fusion broadcasts per-KV-head factors over query groups."""
+    k, v = _kv(0, H=2), _kv(1, H=2)
+    q = jax.random.normal(jax.random.PRNGKey(5), (2, 4, 4, 32)) * 0.2  # G=2
+    cfg = baos_lib.BAOSConfig(enabled=False)
+    cal = baos_lib.calibrate(k, v, cfg)
+    ks, vs = baos_lib.smooth_quantize_kv(k, v, cal, cfg)
+    ref_o = kref.flash_bidir_ref(q, k, v)
+    out = kref.flash_bidir_ref(q, ks, vs, fk=cal.k_scale[:, 0],
+                               fv=cal.v_scale[:, 0], cv=cal.v_center[:, 0])
+    np.testing.assert_allclose(out, ref_o, rtol=2e-4, atol=2e-5)

@@ -1,0 +1,120 @@
+"""Checkpointing round-trips + fault-tolerant runtime recovery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointing
+from repro.runtime.fault_tolerance import (FaultInjector, RuntimeConfig,
+                                           TrainRuntime)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (4, 8)),
+                       "b": jnp.zeros((8,))},
+            "opt": {"m": jnp.ones((3,)), "step": jnp.int32(7)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    checkpointing.save(tmp_path, 3, t, extra={"step": 3})
+    restored, extra = checkpointing.restore(tmp_path, 3, t)
+    assert extra["step"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step(tmp_path):
+    assert checkpointing.latest_step(tmp_path) is None
+    t = _tree()
+    checkpointing.save(tmp_path, 1, t)
+    checkpointing.save(tmp_path, 9, t)
+    assert checkpointing.latest_step(tmp_path) == 9
+
+
+def test_async_checkpointer(tmp_path):
+    ck = checkpointing.AsyncCheckpointer()
+    ck.save(tmp_path, 5, _tree())
+    ck.wait()
+    assert checkpointing.latest_step(tmp_path) == 5
+
+
+def test_restore_with_sharding(tmp_path):
+    """Elastic restore: device_put under an explicit (1-device) sharding."""
+    t = _tree()
+    checkpointing.save(tmp_path, 2, t)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.tree.map(
+        lambda _: jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec()), t)
+    restored, _ = checkpointing.restore(tmp_path, 2, t, shardings=sh)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _quadratic_runtime(tmp_path, injector=None, ckpt_every=2):
+    state = {"params": {"w": jnp.array([4.0])}}
+
+    def step_fn(state, batch, step):
+        w = state["params"]["w"]
+        g = 2 * w
+        w = w - 0.1 * g
+        return {"state": {"params": {"w": w}},
+                "metrics": {"loss": jnp.sum(w * w)}}
+
+    cfg = RuntimeConfig(ckpt_dir=str(tmp_path), ckpt_every=ckpt_every,
+                        max_restarts=3)
+    return TrainRuntime(cfg, state, step_fn, injector)
+
+
+def test_runtime_runs_to_completion(tmp_path):
+    rt = _quadratic_runtime(tmp_path)
+    state = rt.run(iter(lambda: 0, 1), num_steps=10)
+    assert rt.step == 10
+    assert float(state["params"]["w"][0]) < 1.0
+
+
+def test_runtime_recovers_from_injected_failure(tmp_path):
+    inj = FaultInjector(fail_at_steps=[5])
+    rt = _quadratic_runtime(tmp_path, inj)
+    state = rt.run(iter(lambda: 0, 1), num_steps=10)
+    assert rt.restarts == 1
+    assert rt.step == 10
+    assert float(state["params"]["w"][0]) < 1.0
+
+
+def test_runtime_detects_nan(tmp_path):
+    state = {"params": {"w": jnp.array([1.0])}}
+    calls = {"n": 0}
+
+    def step_fn(state, batch, step):
+        calls["n"] += 1
+        # produce NaN once at step 4 (before any restart)
+        w = state["params"]["w"]
+        loss = jnp.where((step == 4) & (calls["n"] <= 5),
+                         jnp.nan, jnp.sum(w * w))
+        return {"state": state, "metrics": {"loss": loss}}
+
+    cfg = RuntimeConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                        max_restarts=3)
+    rt = TrainRuntime(cfg, state, step_fn)
+    rt.run(iter(lambda: 0, 1), num_steps=8)
+    assert rt.restarts >= 1
+    assert rt.step == 8
+
+
+def test_straggler_detection(tmp_path):
+    import time
+    state = {"params": {"w": jnp.array([1.0])}}
+
+    def step_fn(state, batch, step):
+        if step == 7:
+            time.sleep(0.25)
+        return {"state": state, "metrics": {"loss": jnp.float32(1.0)}}
+
+    cfg = RuntimeConfig(ckpt_dir=str(tmp_path), ckpt_every=100,
+                        straggler_factor=3.0)
+    rt = TrainRuntime(cfg, state, step_fn)
+    rt.run(iter(lambda: 0, 1), num_steps=10)
+    assert any(s == 7 for s, _, _ in rt.straggler_events)

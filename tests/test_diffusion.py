@@ -1,0 +1,134 @@
+"""Blocked-diffusion loop invariants + cache-mode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import base
+from repro.core import baos as baos_lib
+from repro.core import diffusion, schedule
+from repro.models.registry import build_model
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 16))
+def test_transfer_schedule_sums(masked, steps):
+    ks = schedule.get_num_transfer_tokens(
+        jnp.array([masked], jnp.int32), steps)
+    assert int(ks.sum()) == masked
+    # earliest steps get the remainder; schedule is non-increasing
+    arr = np.asarray(ks[0])
+    assert all(arr[i] >= arr[i + 1] for i in range(len(arr) - 1))
+
+
+def _setup(arch="llada-8b"):
+    cfg = base.get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab - 2)
+    return cfg, model, params, prompt
+
+
+@pytest.mark.parametrize("cache", ["none", "prefix", "dual"])
+def test_generation_invariants(cache):
+    cfg, model, params, prompt = _setup()
+    dcfg = diffusion.DiffusionConfig(gen_length=16, block_length=8,
+                                     steps_per_block=4, cache_mode=cache)
+    out = diffusion.generate(model, params, prompt, dcfg)
+    assert out.shape == (2, 32)
+    np.testing.assert_array_equal(np.asarray(out[:, :16]),
+                                  np.asarray(prompt))        # prompt intact
+    assert not bool(jnp.any(out[:, 16:] == cfg.mask_id))     # all unmasked
+
+
+def test_single_block_cache_modes_agree():
+    """With one generation block, dual/prefix/none process identical
+    information.  An untrained model's confidences are near-uniform ties,
+    so fp noise may flip the unmask *order*; require high token agreement
+    and verify the underlying logits agree tightly (the exact check lives
+    in test_models.test_cache_refine_matches_full)."""
+    cfg, model, params, prompt = _setup()
+    outs = {}
+    for cache in ["none", "prefix", "dual"]:
+        dcfg = diffusion.DiffusionConfig(
+            gen_length=8, block_length=8, steps_per_block=4,
+            cache_mode=cache, baos=baos_lib.BAOSConfig(enabled=False))
+        outs[cache] = np.asarray(
+            diffusion.generate(model, params, prompt, dcfg))
+    agree_p = (outs["none"] == outs["prefix"]).mean()
+    agree_d = (outs["none"] == outs["dual"]).mean()
+    assert agree_p > 0.7 and agree_d > 0.7, (agree_p, agree_d)
+
+
+def test_monotonic_unmasking():
+    cfg, model, params, prompt = _setup()
+    dcfg = diffusion.DiffusionConfig(gen_length=8, block_length=8,
+                                     steps_per_block=4, cache_mode="dual")
+    # manual loop counting masks per step
+    from repro.core import sampling as slib
+    x = jnp.concatenate([prompt,
+                         jnp.full((2, 8), cfg.mask_id, jnp.int32)], 1)
+    cache = model.init_cache(2, 24)
+    ks = schedule.get_num_transfer_tokens(jnp.full((2,), 8, jnp.int32), 4)
+    prev = 16
+    for t in range(4):
+        if t == 0:
+            logits, cache = diffusion.warm_step(model, params, x, cache,
+                                                jnp.int32(16), dcfg)
+        else:
+            logits, cache = diffusion.refine_step(model, params, x, cache,
+                                                  jnp.int32(16), dcfg)
+        xa = x[:, 16:]
+        xa, _ = slib.sampling_step(logits, xa, cfg.mask_id, ks[:, t],
+                                   dcfg.sampling)
+        x = x.at[:, 16:].set(xa)
+        left = int(jnp.sum(x == cfg.mask_id))
+        assert left < prev
+        prev = left
+    assert prev == 0
+
+
+def test_deterministic_given_rng():
+    cfg, model, params, prompt = _setup()
+    dcfg = diffusion.DiffusionConfig(gen_length=8, block_length=8,
+                                     steps_per_block=4, cache_mode="dual")
+    o1 = diffusion.generate(model, params, prompt, dcfg,
+                            rng=jax.random.PRNGKey(7))
+    o2 = diffusion.generate(model, params, prompt, dcfg,
+                            rng=jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_loss_decreases_under_training():
+    cfg, model, params, prompt = _setup("qwen2-0.5b")
+    from repro.optim import adamw
+    opt = adamw.OptConfig(lr=5e-3, schedule="const", warmup_steps=2)
+    state = adamw.init_state(params)
+    toks = jnp.tile(jax.random.randint(jax.random.PRNGKey(3), (4, 8), 0,
+                                       cfg.vocab - 2), (1, 8))
+
+    @jax.jit
+    def step(p, s, i):
+        rng = jax.random.fold_in(jax.random.PRNGKey(0), i)
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: diffusion.masked_diffusion_loss(model, pp, toks, rng),
+            has_aux=True)(p)
+        p, s, _ = adamw.apply_updates(p, g, s, opt)
+        return p, s, loss
+
+    losses = []
+    for i in range(30):
+        params, state, loss = step(params, state, i)
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.9
+
+
+def test_forward_mask_statistics():
+    toks = jnp.zeros((64, 128), jnp.int32)
+    noisy, mask, t = diffusion.forward_mask(jax.random.PRNGKey(0), toks, 7)
+    frac = np.asarray(mask.mean(axis=1))
+    tt = np.asarray(t[:, 0])
+    np.testing.assert_allclose(frac, tt, atol=0.15)   # iid Bernoulli(t)
+    assert bool(jnp.all(noisy[mask] == 7))

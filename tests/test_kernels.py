@@ -1,0 +1,121 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("R,V", [(1, 64), (8, 512), (13, 1000), (32, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sampling_kernel_sweep(R, V, dtype):
+    logits = (jax.random.normal(jax.random.PRNGKey(R + V), (R, V)) * 6
+              ).astype(dtype)
+    conf, idx = ops.fused_sampling(logits, chunk_v=min(256, V))
+    cref, iref = ref.stablemax_sampling_ref(logits)
+    np.testing.assert_allclose(conf, cref, rtol=3e-3 if dtype == jnp.bfloat16
+                               else 3e-5)
+    np.testing.assert_array_equal(idx, iref)
+
+
+def test_sampling_kernel_suppress():
+    logits = jnp.zeros((4, 256)).at[:, 7].set(50.0)
+    conf, idx = ops.fused_sampling(logits, suppress_id=7, chunk_v=64)
+    cref, iref = ref.stablemax_sampling_ref(logits, suppress_id=7)
+    np.testing.assert_array_equal(idx, iref)
+    assert not bool(jnp.any(idx == 7))
+
+
+def test_sampling_kernel_single_chunk():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
+    conf, idx = ops.fused_sampling(logits, chunk_v=128)
+    cref, iref = ref.stablemax_sampling_ref(logits)
+    np.testing.assert_allclose(conf, cref, rtol=1e-5)
+    np.testing.assert_array_equal(idx, iref)
+
+
+@pytest.mark.parametrize("B,L", [(2, 16), (5, 32), (8, 64)])
+def test_topk_kernel_sweep(B, L):
+    rng = jax.random.PRNGKey(B * L)
+    conf = jax.random.normal(rng, (B, L))
+    mask = jax.random.bernoulli(jax.random.fold_in(rng, 1), 0.6, (B, L))
+    k = jax.random.randint(jax.random.fold_in(rng, 2), (B,), 0, L + 1)
+    tm = ops.transfer_mask(conf, mask, k)
+    tref = ref.topk_mask_ref(conf, mask, k)
+    np.testing.assert_array_equal(np.asarray(tm, np.int32), tref)
+
+
+def test_topk_kernel_ties():
+    conf = jnp.ones((2, 16)) * 0.5          # all-tied confidences
+    mask = jnp.ones((2, 16), bool)
+    k = jnp.array([4, 16], jnp.int32)
+    tm = ops.transfer_mask(conf, mask, k)
+    tref = ref.topk_mask_ref(conf, mask, k)
+    np.testing.assert_array_equal(np.asarray(tm, np.int32), tref)
+
+
+@pytest.mark.parametrize("fmt", ["mxint4", "mxint8", "mxfp8_e4m3"])
+@pytest.mark.parametrize("B,S,H,D", [(1, 8, 1, 32), (2, 33, 3, 64)])
+def test_baos_quant_kernel_sweep(fmt, B, S, H, D):
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (B, S, H, D)) * 5
+    c = jnp.mean(x, axis=1, keepdims=True)
+    f = jnp.maximum(jnp.max(jnp.abs(x - c), axis=1, keepdims=True), 1e-6)
+    q = ops.baos_quantize(x, c, f, fmt)
+    G = B * H
+    qr = ref.baos_mx_quant_ref(
+        x.transpose(0, 2, 1, 3).reshape(G, S, D),
+        c.transpose(0, 2, 1, 3).reshape(G, 1, D),
+        f.transpose(0, 2, 1, 3).reshape(G, 1, D), fmt)
+    qr = qr.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(q, qr, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("Sq,Skv,Hq,Hkv,D",
+                         [(8, 32, 2, 2, 32), (16, 64, 4, 2, 64),
+                          (4, 48, 8, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_sweep(Sq, Skv, Hq, Hkv, D, dtype):
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(Sq + Skv), 6)
+    q = (jax.random.normal(ks[0], (B, Sq, Hq, D)) * 0.5).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D)).astype(dtype)
+    fk = jnp.abs(jax.random.normal(ks[3], (B, Hkv, D))) + 0.5
+    fv = jnp.abs(jax.random.normal(ks[4], (B, Hkv, D))) + 0.5
+    cv = jax.random.normal(ks[5], (B, Hkv, D)) * 0.1
+    o = ops.flash_attention(q, k, v, fk, fv, cv, bq=8, bk=16)
+    oref = ref.flash_bidir_ref(q, k, v, fk, fv, cv)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(oref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [4, 16])
+def test_flash_kernel_window(window):
+    B, Sq, Skv, H, D = 1, 16, 32, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(window), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D)) * 0.4
+    k = jax.random.normal(ks[1], (B, Skv, H, D))
+    v = jax.random.normal(ks[2], (B, Skv, H, D))
+    o = ops.flash_attention(q, k, v, window=window, bq=8, bk=8)
+    oref = ref.flash_bidir_ref(q, k, v, window=window)
+    np.testing.assert_allclose(o, oref, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_kernel_matches_model_attention():
+    """Kernel vs the XLA chunked-attention path used inside the models."""
+    from repro.models import layers
+    B, Sq, Skv, Hq, Hkv, D = 2, 8, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D)) * 0.4
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D))
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D))
+    o_kernel = ops.flash_attention(q, k, v, bq=8, bk=16)
+    o_model = layers.attention(
+        q, k, v, q_pos=jnp.broadcast_to(jnp.arange(Sq), (B, Sq)),
+        kv_pos=jnp.broadcast_to(jnp.arange(Skv), (B, Skv)),
+        kv_valid=jnp.ones((B, Skv), bool), kv_chunk=16)
+    np.testing.assert_allclose(o_kernel, o_model, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,61 @@
+"""Packed MX storage round-trip + compression accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mx, packed
+
+
+@pytest.mark.parametrize("fmt", ["mxint4", "mxint8"])
+@pytest.mark.parametrize("shape", [(4, 64), (2, 3, 96), (5, 45)])
+def test_pack_unpack_matches_fake_quant(fmt, shape):
+    x = jax.random.normal(jax.random.PRNGKey(sum(shape)), shape) * 4
+    p = packed.pack(x, fmt)
+    rec = packed.unpack(p)
+    ref = mx.mx_fake_quant(x, fmt)
+    np.testing.assert_allclose(rec, ref, rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 50.0))
+def test_property_roundtrip(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed % 2**30), (3, 64)) * scale
+    p = packed.pack(x, "mxint4")
+    np.testing.assert_allclose(packed.unpack(p),
+                               mx.mx_fake_quant(x, "mxint4"),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_int4_actually_packs():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
+    p = packed.pack(x, "mxint4")
+    assert p.codes.dtype == jnp.uint8
+    assert p.codes.shape[-1] == 64          # two codes per byte
+    # 4.25 bits/elt vs 16 -> ~3.76x vs bf16
+    ratio = (8 * 128 * 2) / p.nbytes
+    assert 3.5 < ratio < 4.0
+
+
+def test_kv_cache_compression_accounting():
+    # codeqwen decode_32k per-device KV cache: 3.76x smaller packed
+    shape = (32, 8, 32768, 2, 128)
+    r = packed.compression_ratio(shape, "mxint4")
+    assert 3.5 < r < 4.0
+
+
+def test_packed_attention_equals_emulated():
+    """Attention over an unpacked-from-int4 cache == attention over the
+    fake-quant cache (the serving-path substitution is free)."""
+    from repro.kernels import ref as kref
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 2, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 2, 64))
+    q = jax.random.normal(jax.random.PRNGKey(3), (2, 4, 4, 64)) * 0.3
+    k_fake = mx.mx_fake_quant(k, "mxint4")
+    v_fake = mx.mx_fake_quant(v, "mxint4")
+    k_packed = packed.unpack(packed.pack(k, "mxint4"), dtype=k.dtype)
+    v_packed = packed.unpack(packed.pack(v, "mxint4"), dtype=v.dtype)
+    o1 = kref.flash_bidir_ref(q, k_fake, v_fake)
+    o2 = kref.flash_bidir_ref(q, k_packed, v_packed)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,108 @@
+"""Stable-Max sampling stage invariants (core/sampling.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sampling
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 300))
+def test_stablemax_equals_full_softmax(seed, V):
+    logits = jax.random.normal(jax.random.PRNGKey(seed % 2**30), (3, V)) * 8
+    c1, i1 = sampling.stable_max(logits)
+    c2, i2 = sampling.full_softmax_reference(logits)
+    np.testing.assert_allclose(c1, c2, rtol=1e-5)
+    np.testing.assert_array_equal(i1, i2)
+
+
+def test_two_pass_equals_single_pass():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 7, 501)) * 5
+    c1, i1 = sampling.stable_max(logits, "mxfp8_e4m3")
+    c2, i2 = sampling.stable_max_two_pass(logits, "mxfp8_e4m3")
+    np.testing.assert_allclose(c1, c2, rtol=1e-6)
+    np.testing.assert_array_equal(i1, i2)
+
+
+def test_chunked_combine_equals_global():
+    """The vocab-shard combine rule (m, idx, s) matches the global result —
+    validates the distributed sampling math without needing >1 device."""
+    V, nsh = 512, 8
+    logits = jax.random.normal(jax.random.PRNGKey(1), (5, V)) * 6
+    gm, gi, gs = None, None, None
+    for sh in range(nsh):
+        z = logits[:, sh * V // nsh:(sh + 1) * V // nsh]
+        m, i, s = sampling.local_partials(z)
+        gidx = i + sh * (V // nsh)
+        if gm is None:
+            gm, gi, gs = m, gidx, s
+        else:
+            m_new = jnp.maximum(gm, m)
+            gs = gs * jnp.exp(gm - m_new) + s * jnp.exp(m - m_new)
+            gi = jnp.where(m > gm, gidx, gi)
+            gm = m_new
+    cref, iref = sampling.stable_max(logits)
+    np.testing.assert_allclose(1.0 / gs, cref, rtol=1e-5)
+    np.testing.assert_array_equal(gi, iref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 33))
+def test_topk_exact_count(seed, k):
+    rng = jax.random.PRNGKey(seed % 2**30)
+    conf = jax.random.normal(rng, (4, 33))
+    mask = jax.random.bernoulli(jax.random.fold_in(rng, 1), 0.5, (4, 33))
+    kv = jnp.full((4,), k, jnp.int32)
+    tr = sampling.topk_transfer_mask(conf, mask, kv)
+    expect = np.minimum(k, np.asarray(mask.sum(-1)))
+    np.testing.assert_array_equal(np.asarray(tr.sum(-1)), expect)
+    assert bool(jnp.all(~tr | mask))          # transfers only masked slots
+
+
+def test_topk_selects_highest_confidence():
+    conf = jnp.array([[0.1, 0.9, 0.5, 0.7]])
+    mask = jnp.array([[True, True, True, False]])
+    tr = sampling.topk_transfer_mask(conf, mask, jnp.array([2]))
+    np.testing.assert_array_equal(np.asarray(tr[0]),
+                                  [False, True, True, False])
+
+
+def test_commit_preserves_unselected():
+    x = jnp.array([[1, 2, 3]], jnp.int32)
+    x0 = jnp.array([[7, 8, 9]], jnp.int32)
+    tr = jnp.array([[True, False, True]])
+    np.testing.assert_array_equal(
+        np.asarray(sampling.commit_tokens(x, x0, tr)), [[7, 2, 9]])
+
+
+def test_suppress_mask_token():
+    V, mask_id = 64, 17
+    logits = jnp.zeros((2, 8, V)).at[..., mask_id].set(100.0)
+    x = jnp.full((2, 8), mask_id, jnp.int32)
+    cfg = sampling.SamplingConfig(fmt="none")
+    out, tr = sampling.sampling_step(logits, x, mask_id,
+                                     jnp.full((2,), 8, jnp.int32), cfg)
+    assert not bool(jnp.any(out == mask_id))
+
+
+def test_gumbel_temperature_sampling():
+    logits = jax.random.normal(jax.random.PRNGKey(2), (4, 100)) * 2
+    conf, idx = sampling.stable_max(logits, temperature=1.0,
+                                    rng=jax.random.PRNGKey(3))
+    # confidence equals the softmax prob of the *sampled* token
+    p = jax.nn.softmax(logits, -1)
+    np.testing.assert_allclose(
+        conf, np.take_along_axis(np.asarray(p),
+                                 np.asarray(idx)[:, None], 1)[:, 0],
+        rtol=1e-4)
+
+
+def test_random_strategy_unmasks_k():
+    logits = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 32))
+    x = jnp.full((2, 8), 31, jnp.int32)
+    cfg = sampling.SamplingConfig(fmt="none", strategy="random")
+    out, tr = sampling.sampling_step(logits, x, 31,
+                                     jnp.full((2,), 3, jnp.int32), cfg,
+                                     rng=jax.random.PRNGKey(5))
+    np.testing.assert_array_equal(np.asarray(tr.sum(-1)), [3, 3])

@@ -1,0 +1,135 @@
+"""Logical-sharding rules + QuaRot rotation identities + analytical sim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sharding as shlib
+from repro.core import quarot
+from repro.sim import analytical
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 4, "model": 8}
+
+
+def test_spec_for_divisibility_drop():
+    with shlib.use_context(_FakeMesh(), {"batch": "data", "heads": "model"}):
+        # heads=2 not divisible by 8 -> dropped; batch=8 divisible by 4
+        spec = shlib.spec_for(("batch", "heads"), (8, 2))
+        assert spec == jax.sharding.PartitionSpec("data")
+        spec = shlib.spec_for(("batch", "heads"), (8, 16))
+        assert spec == jax.sharding.PartitionSpec("data", "model")
+
+
+def test_spec_for_dedup():
+    with shlib.use_context(_FakeMesh(), {"kv_seq": "model",
+                                         "kv_heads": "model"}):
+        spec = shlib.spec_for(("kv_seq", "kv_heads"), (64, 8))
+        assert spec == jax.sharding.PartitionSpec("model")   # first wins
+
+
+def test_shard_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    np.testing.assert_array_equal(shlib.shard(x, "batch", None), x)
+
+
+def test_make_rules_gqa_vs_mha():
+    from repro.launch.sharding import make_rules
+    from repro.configs import base
+
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    mha = base.get_config("codeqwen1.5-7b")       # kv=32 divisible
+    r = make_rules(mha, M())
+    assert r["kv_heads"] == "model" and r["kv_seq"] is None
+    gqa = base.get_config("llama3.2-3b")          # kv=8 not divisible
+    r = make_rules(gqa, M())
+    assert r["kv_heads"] is None and r["kv_seq"] == "model"
+
+
+def test_quarot_orthogonality():
+    h = quarot.hadamard_matrix(64)
+    np.testing.assert_allclose(h @ h.T, np.eye(64), atol=1e-6)
+
+
+def test_quarot_qk_invariance():
+    q = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (6, 64))
+    s_ref = q @ k.T
+    s_rot = quarot.rotate(q) @ quarot.rotate(k).T
+    np.testing.assert_allclose(s_rot, s_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_quarot_spreads_outliers():
+    x = jnp.ones((16, 64)).at[:, 3].set(100.0)
+    xr = quarot.rotate(x)
+    assert float(jnp.abs(xr).max()) < float(jnp.abs(x).max()) / 2
+
+
+# -- analytical simulator sanity --------------------------------------------
+
+def test_roofline_max_semantics():
+    c = analytical.Cost(t_cmp=2.0, t_mem=1.0)
+    assert c.t == 2.0
+    tot = c + analytical.Cost(t_cmp=0.5, t_mem=3.0)
+    assert tot.t == 5.0          # sum of per-op maxima
+
+
+def test_gemm_scales_with_size():
+    hw = analytical.HWConfig()
+    small = analytical.gemm(128, 512, 512, hw)
+    big = analytical.gemm(1024, 512, 512, hw)
+    assert big.t_cmp > small.t_cmp * 4
+
+
+def test_sampling_single_pass_cheaper():
+    hw = analytical.HWConfig()
+    two = analytical.sampling_stage(16, 64, 126464, hw, v_chunk=4096,
+                                    two_pass=True)
+    one = analytical.sampling_stage(16, 64, 126464, hw, v_chunk=4096,
+                                    two_pass=False)
+    assert one.hbm_bytes < two.hbm_bytes
+    assert one.t <= two.t
+
+
+def test_cache_mode_ordering():
+    """dual > prefix > none in throughput (paper Table 6 ordering)."""
+    from repro.configs import base
+    cfg = base.get_config("llada-8b")
+    hw = analytical.HWConfig()
+    tps = {}
+    for mode in ["none", "prefix", "dual"]:
+        tps[mode] = analytical.end_to_end(
+            cfg, hw, B=16, prompt=128, gen_len=256, block_len=64, steps=16,
+            cache_mode=mode).tps
+    assert tps["dual"] > tps["prefix"] > tps["none"]
+
+
+def test_sampling_fraction_drops_with_precision():
+    """Paper Fig. 1 -> §6.1: FP64 reference dominates; MXFP8 <10%.
+
+    The <10% check uses the dense model (paper Table 6 dense-dual samp is
+    0.6%); our analytical model's dual-mode transformer time runs ~2x fast
+    (documented in EXPERIMENTS.md), which inflates MoE sampling fractions.
+    """
+    from repro.configs import base
+    hw = analytical.HWConfig()
+    dense = base.get_config("llada-8b")
+    dart = analytical.end_to_end(dense, hw, B=16, prompt=128, gen_len=256,
+                                 block_len=64, steps=16, cache_mode="dual",
+                                 sampling_fmt="mxfp8_e4m3")
+    assert dart.sampling_frac < 0.10          # paper §1: "under 10%"
+    moe = base.get_config("llada-moe-7b-a1b")
+    ref = analytical.end_to_end(moe, hw, B=16, prompt=128, gen_len=256,
+                                block_len=64, steps=16, cache_mode="dual",
+                                sampling_fmt="fp64",
+                                sampling_engine="reference")
+    dart_moe = analytical.end_to_end(moe, hw, B=16, prompt=128, gen_len=256,
+                                     block_len=64, steps=16,
+                                     cache_mode="dual",
+                                     sampling_fmt="mxfp8_e4m3")
+    assert ref.sampling_frac > 2 * dart_moe.sampling_frac

@@ -1,0 +1,85 @@
+"""Split active-block cache (§Perf optimization) — exactness guarantees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.core import baos as baos_lib
+from repro.core import diffusion
+from repro.models.registry import build_model
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "qwen2-0.5b"])
+def test_split_refine_matches_full_forward(arch):
+    """With quantization off, a split-cache refinement on unchanged tokens
+    must equal the cache-free forward exactly (the two-source softmax
+    combine + same-space smoothing identities)."""
+    cfg = base.get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, L = 2, 32, 8
+    bs = S - L
+    x = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab - 2)
+    dcfg = diffusion.DiffusionConfig(
+        gen_length=L, block_length=L, steps_per_block=2, cache_mode="dual",
+        baos=baos_lib.BAOSConfig(enabled=False))
+    full_logits, _, _ = model.forward(params, tokens=x,
+                                      logits_slice=(bs, L))
+    cache = model.init_cache(B, S, act_len=L)
+    assert "k_act" in cache
+    _, cache = diffusion.warm_step(model, params, x, cache, jnp.int32(bs),
+                                   dcfg)
+    refine_logits, _ = diffusion.refine_step(model, params, x, cache,
+                                             jnp.int32(bs), dcfg)
+    np.testing.assert_allclose(np.asarray(refine_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_split_refine_with_baos_close_to_unified():
+    """With BAOS int8 quantization the split path must track the unified
+    path closely (same smoothed space; only the active block is
+    unquantized in split — strictly *more* accurate)."""
+    cfg = base.get_config("llama3.2-3b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, L = 2, 32, 8
+    bs = S - L
+    x = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab - 2)
+    dcfg = diffusion.DiffusionConfig(
+        gen_length=L, block_length=L, steps_per_block=2, cache_mode="dual",
+        baos=baos_lib.BAOSConfig(enabled=True, kv_format="mxint8"))
+
+    outs = {}
+    for split in [False, True]:
+        cache = model.init_cache(B, S, act_len=L if split else None)
+        _, cache = diffusion.warm_step(model, params, x, cache,
+                                       jnp.int32(bs), dcfg)
+        logits, _ = diffusion.refine_step(model, params, x, cache,
+                                          jnp.int32(bs), dcfg)
+        outs[split] = np.asarray(logits, np.float32)
+    err = np.abs(outs[True] - outs[False]).max()
+    scale = np.abs(outs[False]).max()
+    assert err < 0.05 * scale, (err, scale)
+
+
+def test_split_generation_unmasks():
+    """End-to-end generation through the split cache commits every token."""
+    cfg = base.get_config("qwen2-0.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab - 2)
+    dcfg = diffusion.DiffusionConfig(
+        gen_length=16, block_length=8, steps_per_block=4, cache_mode="dual",
+        baos=baos_lib.BAOSConfig(enabled=True, kv_format="mxint8"))
+    # generate() builds the cache itself; emulate split by monkeypatching
+    import functools
+    orig = model.init_cache
+    model.init_cache = functools.partial(orig, act_len=8)
+    try:
+        out = diffusion.generate(model, params, prompt, dcfg)
+    finally:
+        model.init_cache = orig
+    assert not bool(jnp.any(out[:, 16:] == cfg.mask_id))
