@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   table6_end2end       end-to-end TPS/energy vs the paper's GPU rows
   fig9_dse             design-space sweep (VLEN/MLEN/BLEN)
   roofline_report      §Roofline tables from the dry-run artifacts
+  serve_engine         continuous-batching engine vs legacy serving TPS
 """
 from __future__ import annotations
 
@@ -21,7 +22,7 @@ import traceback
 MODULES = [
     "fig1_breakdown", "fig7_sampling_sweeps", "table2_hbm",
     "table3_pipeline", "table4_crossval", "table5_quant",
-    "table6_end2end", "fig9_dse", "roofline_report",
+    "table6_end2end", "fig9_dse", "roofline_report", "serve_engine",
 ]
 
 

@@ -1,25 +1,40 @@
-"""Batched-request dLLM serving with per-cache-mode comparison.
+"""Continuous-batching dLLM serving demo.
 
-Serves synthetic batched requests through all three KV-cache strategies
-(none / prefix / dual — paper Fig. 4) and prints the TPS ordering the
-paper's Table 6 documents, plus the DART quantization stack effect.
+Drives the serving engine (repro.serving) over a mixed-length synthetic
+request trace under each scheduler policy, prints the latency/throughput/
+occupancy summary, then runs the legacy one-batch-at-a-time path and the
+per-cache-mode comparison (paper Fig. 4 / Table 6) for reference.
 
     PYTHONPATH=src python examples/serve_dllm.py
 """
 from repro.launch import serve as serve_cli
 
+ENGINE_BASE = [
+    "--arch", "llada-8b", "--batch", "2", "--prompt-len", "16",
+    "--gen-len", "32", "--block-len", "8", "--steps", "4",
+    "--requests", "3", "--mixed",
+]
+
 
 def main():
+    for policy in ["fifo", "sgf", "slowfast"]:
+        print(f"\n=== engine: policy={policy} (warm ticks, mixed lengths) ===")
+        serve_cli.main(ENGINE_BASE + ["--policy", policy])
+
+    print("\n=== engine: per-stage breakdown (Fig. 1 serving analogue) ===")
+    serve_cli.main(ENGINE_BASE + ["--breakdown"])
+
     for cache in ["none", "prefix", "dual"]:
-        print(f"\n=== cache mode: {cache} ===")
+        print(f"\n=== legacy: cache mode {cache} ===")
         serve_cli.main([
-            "--arch", "llada-8b", "--batch", "2", "--prompt-len", "16",
-            "--gen-len", "32", "--block-len", "16", "--steps", "4",
-            "--cache", cache, "--requests", "2"])
-    print("\n=== dual + no quantization (BF16 reference) ===")
+            "--legacy", "--arch", "llada-8b", "--batch", "2",
+            "--prompt-len", "16", "--gen-len", "32", "--block-len", "16",
+            "--steps", "4", "--cache", cache, "--requests", "2"])
+
+    print("\n=== legacy: dual + no quantization (BF16 reference) ===")
     serve_cli.main([
-        "--arch", "llada-8b", "--batch", "2", "--prompt-len", "16",
-        "--gen-len", "32", "--block-len", "16", "--steps", "4",
+        "--legacy", "--arch", "llada-8b", "--batch", "2", "--prompt-len",
+        "16", "--gen-len", "32", "--block-len", "16", "--steps", "4",
         "--cache", "dual", "--no-baos", "--sampling-fmt", "none",
         "--requests", "2"])
 

@@ -86,14 +86,135 @@ def refine_step(model, params, x: jax.Array, cache, block_start,
     return logits, cache
 
 
-def full_step(model, params, x: jax.Array, block_start,
-              dcfg: DiffusionConfig, **fwd_kw):
-    """Cache-free full recompute (Block Diffusion / cache_mode='none')."""
+# ---------------------------------------------------------------------------
+# Resumable per-request state machine
+#
+# ``generate()`` below is a thin loop over (init_state, step); the serving
+# engine (repro.serving) drives the same machine one step at a time so
+# requests at different block/step offsets can share an engine tick.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionState:
+    """Everything needed to resume blocked-diffusion decoding of one request.
+
+    ``x`` is the full canvas (prompt + masked generation region), ``cache``
+    the KV cache pytree (None for cache_mode='none'), ``ks`` the per-block
+    transfer schedule (B, steps_per_block).  ``block_idx``/``step_in_block``
+    are host-side ints so the driving loop stays un-traced.
+    """
+    x: jax.Array
+    cache: Any
+    rng: jax.Array
+    ks: jax.Array
+    dcfg: DiffusionConfig
+    mask_id: int
+    prompt_len: int
+    block_idx: int = 0
+    step_in_block: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.block_idx >= self.dcfg.num_blocks
+
+    @property
+    def block_start(self) -> int:
+        return self.prompt_len + self.block_idx * self.dcfg.block_length
+
+    @property
+    def tokens(self) -> jax.Array:
+        return self.x
+
+
+def init_state(model, prompt: jax.Array, dcfg: DiffusionConfig,
+               rng: Optional[jax.Array] = None,
+               mask_id: Optional[int] = None) -> DiffusionState:
+    """Build the step-0 state for a (batched) request: masked canvas, fresh
+    KV cache, per-block transfer schedule, rng chain."""
+    mask_id = model.cfg.mask_id if mask_id is None else mask_id
+    B, P = prompt.shape
+    s_tot = P + dcfg.gen_length
+    x = jnp.concatenate(
+        [prompt.astype(jnp.int32),
+         jnp.full((B, dcfg.gen_length), mask_id, jnp.int32)], axis=1)
+    cache = model.init_cache(B, s_tot) if dcfg.cache_mode != "none" else None
+    ks = schedule_lib.get_num_transfer_tokens(
+        jnp.full((B,), dcfg.block_length, jnp.int32), dcfg.steps_per_block)
+    return DiffusionState(
+        x=x, cache=cache,
+        rng=rng if rng is not None else jax.random.PRNGKey(0),
+        ks=ks, dcfg=dcfg, mask_id=mask_id, prompt_len=P)
+
+
+def _commit_block(logits, x, bs, k, step_rng, dcfg: DiffusionConfig,
+                  mask_id: int):
+    """Stable-Max sample the active block and write it back into the canvas."""
     L = dcfg.block_length
-    logits, _, _ = model.forward(
-        params, tokens=x, cache=None, seg_start=0,
-        logits_slice=(block_start, L), **fwd_kw)
-    return logits
+    xa = jax.lax.dynamic_slice_in_dim(x, bs, L, axis=1)
+    xa_new, _ = sampling_lib.sampling_step(
+        logits, xa, mask_id, k, dcfg.sampling, step_rng)
+    return jax.lax.dynamic_update_slice_in_dim(x, xa_new, bs, axis=1)
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_step_fn(model, dcfg: DiffusionConfig, kind: str, suffix_len: int,
+                    jit_steps: bool):
+    """Per-(model, dcfg) jitted forward for one step kind.  Cached at module
+    level so generate() calls and long-lived serving engines share compiles."""
+    if kind == "warm":
+        fn = functools.partial(warm_step, model, dcfg=dcfg)
+    elif kind == "refine":
+        fn = functools.partial(refine_step, model, dcfg=dcfg,
+                               suffix_len=suffix_len)
+    else:
+        raise ValueError(kind)
+    return jax.jit(fn) if jit_steps else fn
+
+
+def step(model, params, state: DiffusionState, jit_steps: bool = True,
+         **fwd_kw) -> DiffusionState:
+    """Advance one denoising step (one forward + one sampling commit).
+
+    Mirrors the inner loop of paper Alg. 2 exactly: warm step at
+    step_in_block==0, refinement (per cache mode) afterwards, Stable-Max
+    commit of ks[:, t] tokens, one rng split per step.
+    """
+    if state.done:
+        raise ValueError("step() called on a finished DiffusionState")
+    dcfg = state.dcfg
+    L, T = dcfg.block_length, dcfg.steps_per_block
+    B, s_tot = state.x.shape
+    bs = state.block_start
+    t = state.step_in_block
+    rng, srng = jax.random.split(state.rng)
+    cache = state.cache
+
+    if dcfg.cache_mode == "none":
+        tick = get_tick_fn(model, dcfg, state.mask_id, jit_steps=jit_steps)
+        x, _, _, _ = tick(params, state.x,
+                          jnp.ones((B, s_tot), bool),
+                          jnp.full((B,), bs, jnp.int32),
+                          state.ks[:, t], srng, None, **fwd_kw)
+    else:
+        if t == 0:
+            fn = _cached_step_fn(model, dcfg, "warm", 0, jit_steps)
+        else:
+            suffix = (s_tot - (bs + L)) if dcfg.cache_mode == "prefix" else 0
+            fn = _cached_step_fn(model, dcfg, "refine", suffix, jit_steps)
+        logits, cache = fn(params, state.x, cache, jnp.int32(bs), **fwd_kw)
+        x = _commit_block(logits, state.x, jnp.int32(bs), state.ks[:, t],
+                          srng, dcfg, state.mask_id)
+
+    t += 1
+    block_idx = state.block_idx
+    ks = state.ks
+    if t == T:
+        t = 0
+        block_idx += 1
+        ks = schedule_lib.get_num_transfer_tokens(
+            jnp.full((B,), L, jnp.int32), T)
+    return dataclasses.replace(state, x=x, cache=cache, rng=rng, ks=ks,
+                               block_idx=block_idx, step_in_block=t)
 
 
 def generate(model, params, prompt: jax.Array, dcfg: DiffusionConfig,
@@ -101,61 +222,110 @@ def generate(model, params, prompt: jax.Array, dcfg: DiffusionConfig,
              jit_steps: bool = True, **fwd_kw) -> jax.Array:
     """Blocked diffusion generation (paper Alg. 2 outer loops).
 
-    prompt: (B, P) int32.  Returns (B, P + gen_length) tokens.
+    prompt: (B, P) int32.  Returns (B, P + gen_length) tokens.  Thin loop
+    over the resumable state machine (init_state / step).
     """
-    cfg = model.cfg
-    mask_id = cfg.mask_id if mask_id is None else mask_id
-    B, P = prompt.shape
-    L, T = dcfg.block_length, dcfg.steps_per_block
-    s_tot = P + dcfg.gen_length
-    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    state = init_state(model, prompt, dcfg, rng=rng, mask_id=mask_id)
+    while not state.done:
+        state = step(model, params, state, jit_steps=jit_steps, **fwd_kw)
+    return state.x
 
-    x = jnp.concatenate(
-        [prompt.astype(jnp.int32),
-         jnp.full((B, dcfg.gen_length), mask_id, jnp.int32)], axis=1)
 
-    use_cache = dcfg.cache_mode != "none"
-    cache = model.init_cache(B, s_tot) if use_cache else None
+# ---------------------------------------------------------------------------
+# Batched serving tick: full-sequence forward + per-row active-block sampling
+# ---------------------------------------------------------------------------
 
-    def sample(logits, x, bs, k, step_rng):
-        xa = jax.lax.dynamic_slice_in_dim(x, bs, L, axis=1)
-        xa_new, _ = sampling_lib.sampling_step(
-            logits, xa, mask_id, k, dcfg.sampling, step_rng)
-        return jax.lax.dynamic_update_slice_in_dim(x, xa_new, bs, axis=1)
+def tick_forward(model, params, x: jax.Array, kv_valid: jax.Array,
+                 block_start: jax.Array, cache, dcfg: DiffusionConfig,
+                 **fwd_kw):
+    """Forward half of a serving tick over per-row block offsets.
 
-    warm_fn = functools.partial(warm_step, model, dcfg=dcfg, **fwd_kw)
-    full_fn = functools.partial(full_step, model, dcfg=dcfg, **fwd_kw)
+    Without ``cache`` this is the Block-Diffusion full recompute
+    (cache_mode='none'); with it, a warm step per tick: all KV is recomputed
+    and rewritten through the BAOS smoothing/quantization path, so attention
+    reads the same quantized cache the paper's warm step produces.
+    Returns the *full-sequence* logits (per-row slicing happens in
+    ``tick_sample`` because block_start differs per row).
+    """
+    B, s_tot = x.shape
+    L = dcfg.block_length
+    if cache is None:
+        logits, _, _ = model.forward(
+            params, tokens=x, cache=None, seg_start=0, kv_valid=kv_valid,
+            **fwd_kw)
+        return logits, None
+    calib_mask = None
+    if dcfg.baos.calib_scope == "active_block":
+        pos = jnp.arange(s_tot, dtype=jnp.int32)[None, :]
+        calib_mask = ((pos >= block_start[:, None]) &
+                      (pos < block_start[:, None] + L))
+    logits, new_cache, _ = model.forward(
+        params, tokens=x, cache=cache, seg_start=0, kv_valid=kv_valid,
+        baos_cfg=dcfg.baos, calibrate=True, calib_mask=calib_mask, **fwd_kw)
+    return logits, new_cache
+
+
+def tick_sample(logits: jax.Array, x: jax.Array, block_start: jax.Array,
+                k: jax.Array, srng: jax.Array, dcfg: DiffusionConfig,
+                mask_id: int):
+    """Sampling half of a serving tick: per-row active-block slice,
+    Stable-Max commit of k tokens (k=0 rows are no-ops), scatter back.
+
+    Returns (x_new, conf_min, masks_left) where conf_min is the minimum
+    Stable-Max confidence over the tokens committed this tick (+inf when
+    none) — the SlowFast early-exit signal — and masks_left counts masked
+    positions remaining in each row's active block.
+    """
+    L = dcfg.block_length
+
+    def row_slice(a, s):
+        return jax.lax.dynamic_slice_in_dim(a, s, L, axis=0)
+
+    la = jax.vmap(row_slice)(logits, block_start)
+    xa = jax.vmap(row_slice)(x, block_start)
+    xa_new, transfer, conf = sampling_lib.sampling_step_full(
+        la, xa, mask_id, k, dcfg.sampling, srng)
+    x_new = jax.vmap(
+        lambda row, upd, s: jax.lax.dynamic_update_slice_in_dim(
+            row, upd, s, axis=0))(x, xa_new, block_start)
+    conf_min = jnp.min(jnp.where(transfer, conf, jnp.inf), axis=-1)
+    masks_left = jnp.sum(xa_new == mask_id, axis=-1).astype(jnp.int32)
+    return x_new, conf_min, masks_left
+
+
+def batched_tick(model, params, x, kv_valid, block_start, k, srng, cache,
+                 dcfg: DiffusionConfig = None, mask_id: int = 0, **fwd_kw):
+    """One fused engine tick: single forward + single Stable-Max sampling
+    call over all serving slots.  Also the cache_mode='none' step of the
+    state machine (block_start broadcast), so a one-slot engine runs the
+    exact computation ``generate()`` runs — bit-identical greedy tokens."""
+    logits, new_cache = tick_forward(model, params, x, kv_valid, block_start,
+                                     cache, dcfg, **fwd_kw)
+    x_new, conf_min, masks_left = tick_sample(logits, x, block_start, k,
+                                              srng, dcfg, mask_id)
+    return x_new, new_cache, conf_min, masks_left
+
+
+@functools.lru_cache(maxsize=32)
+def get_tick_fn(model, dcfg: DiffusionConfig, mask_id: int,
+                jit_steps: bool = True):
+    """Jitted ``batched_tick`` shared by generate() and the serving engine
+    (same (model, dcfg) key -> same compiled executable)."""
+    fn = functools.partial(batched_tick, model, dcfg=dcfg, mask_id=mask_id)
+    return jax.jit(fn) if jit_steps else fn
+
+
+@functools.lru_cache(maxsize=32)
+def get_tick_stage_fns(model, dcfg: DiffusionConfig, mask_id: int,
+                       jit_steps: bool = True):
+    """(forward, sampling) jitted separately — the engine's per-stage
+    latency-breakdown mode (Fig. 1 attribution); math identical to the
+    fused tick."""
+    fwd = functools.partial(tick_forward, model, dcfg=dcfg)
+    smp = functools.partial(tick_sample, dcfg=dcfg, mask_id=mask_id)
     if jit_steps:
-        warm_fn = jax.jit(warm_fn)
-        full_fn = jax.jit(full_fn)
-
-    refine_fns = {}
-
-    def get_refine(suffix_len):
-        if suffix_len not in refine_fns:
-            fn = functools.partial(refine_step, model, dcfg=dcfg,
-                                   suffix_len=suffix_len, **fwd_kw)
-            refine_fns[suffix_len] = jax.jit(fn) if jit_steps else fn
-        return refine_fns[suffix_len]
-
-    for nb in range(dcfg.num_blocks):
-        bs = P + nb * L
-        mask_count = jnp.full((B,), L, jnp.int32)
-        ks = schedule_lib.get_num_transfer_tokens(mask_count, T)  # (B, T)
-
-        for t in range(T):
-            rng, srng = jax.random.split(rng)
-            if not use_cache:
-                logits = full_fn(params, x, jnp.int32(bs))
-            elif t == 0:
-                logits, cache = warm_fn(params, x, cache, jnp.int32(bs))
-            else:
-                suffix = (s_tot - (bs + L)) if dcfg.cache_mode == "prefix" else 0
-                logits, cache = get_refine(suffix)(
-                    params, x, cache, jnp.int32(bs))
-            x = sample(logits, x, jnp.int32(bs), ks[:, t], srng)
-
-    return x
+        fwd, smp = jax.jit(fwd), jax.jit(smp)
+    return fwd, smp
 
 
 # ---------------------------------------------------------------------------

@@ -145,25 +145,41 @@ def commit_tokens(x: jax.Array, x0: jax.Array, transfer: jax.Array
     return jnp.where(transfer, x0, x)
 
 
-def sampling_step(logits: jax.Array, x: jax.Array, mask_id: int,
-                  k: jax.Array, cfg: SamplingConfig,
-                  rng: Optional[jax.Array] = None
-                  ) -> Tuple[jax.Array, jax.Array]:
+def sampling_step_full(logits: jax.Array, x: jax.Array, mask_id: int,
+                       k: jax.Array, cfg: SamplingConfig,
+                       rng: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One full sampling stage (Alg. 2 phases 1-4) for the active block.
 
     logits (B, L, V), x (B, L) current tokens, k (B,) tokens to unmask.
-    Returns (new tokens (B, L), transfer mask (B, L)).
+    Returns (new tokens (B, L), transfer mask (B, L), conf (B, L)) where
+    conf is always the model (Stable-Max) confidence of the sampled tokens —
+    even under strategy='random', whose uniform draw only reorders the
+    *transfer* selection — so schedulers can gate on it.
     """
     m_idx = x == mask_id
     sup = mask_id if cfg.suppress_mask_token else None
     conf, x0 = stable_max(logits, cfg.fmt, rng, cfg.temperature,
                           suppress_id=sup)
+    select = conf
     if cfg.strategy == "random":
-        conf = jax.random.uniform(
-            rng if rng is not None else jax.random.PRNGKey(0), conf.shape)
+        if rng is None:
+            raise ValueError(
+                "strategy='random' requires an rng key: without one every "
+                "call would reuse the identical PRNGKey(0) transfer order")
+        select = jax.random.uniform(rng, conf.shape)
     x0 = jnp.where(m_idx, x0, x)                 # keep committed tokens
-    transfer = topk_transfer_mask(conf, m_idx, k)
-    return commit_tokens(x, x0, transfer), transfer
+    transfer = topk_transfer_mask(select, m_idx, k)
+    return commit_tokens(x, x0, transfer), transfer, conf
+
+
+def sampling_step(logits: jax.Array, x: jax.Array, mask_id: int,
+                  k: jax.Array, cfg: SamplingConfig,
+                  rng: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """As ``sampling_step_full`` without the confidence output."""
+    new_x, transfer, _ = sampling_step_full(logits, x, mask_id, k, cfg, rng)
+    return new_x, transfer
 
 
 def full_softmax_reference(logits: jax.Array):

@@ -1,6 +1,10 @@
-"""Serving driver: batched blocked-diffusion inference with the DART
-serving policy (dual KV cache, BAOS-smoothed MXINT4 cache, MXFP8
-Stable-Max sampling) and a per-stage latency breakdown (paper Fig. 1).
+"""Serving driver: continuous-batching dLLM engine (default) or the legacy
+one-batch-at-a-time loop (``--legacy``).
+
+Engine path: packs requests into padded batch slots over a preallocated KV
+slot pool and advances all of them with one fused forward + Stable-Max
+sampling call per tick (repro.serving); prints slot occupancy, p50/p99
+request latency, and the per-stage breakdown with ``--breakdown``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --batch 4 --prompt-len 32 --gen-len 64 --block-len 16 --steps 8
@@ -19,9 +23,10 @@ from repro.core import baos as baos_lib
 from repro.core import diffusion
 from repro.core import sampling as sampling_lib
 from repro.models.registry import build_model
+from repro.serving import Request, ServingEngine, get_policy
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llada-8b")
     ap.add_argument("--smoke", action="store_true", default=True)
@@ -38,25 +43,43 @@ def main(argv=None):
     ap.add_argument("--no-baos", action="store_true")
     ap.add_argument("--requests", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    # engine path
+    ap.add_argument("--legacy", action="store_true",
+                    help="one synchronous generate() batch per request")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="engine batch slots (default: --batch)")
+    ap.add_argument("--mode", default="warm", choices=["warm", "none"],
+                    help="engine tick mode: pooled warm step / full recompute")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "sgf", "slowfast"])
+    ap.add_argument("--slowfast-threshold", type=float, default=0.9)
+    ap.add_argument("--mixed", action="store_true",
+                    help="vary request prompt/gen lengths across the trace")
+    ap.add_argument("--breakdown", action="store_true",
+                    help="time forward vs sampling stages per tick (Fig. 1)")
+    return ap
 
-    cfg = configs.get_config(args.arch, smoke=args.smoke)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
 
-    dcfg = diffusion.DiffusionConfig(
+def make_dcfg(args) -> diffusion.DiffusionConfig:
+    return diffusion.DiffusionConfig(
         gen_length=args.gen_len, block_length=args.block_len,
         steps_per_block=args.steps, cache_mode=args.cache,
         sampling=sampling_lib.SamplingConfig(fmt=args.sampling_fmt),
         baos=baos_lib.BAOSConfig(enabled=not args.no_baos,
                                  kv_format=args.kv_format))
 
-    fwd_kw = {}
+
+def _fwd_kw(cfg, model, params, batch):
+    kw = {}
     if cfg.family == "audio":
         audio = jax.random.normal(
-            jax.random.PRNGKey(1), (args.batch, cfg.n_audio_ctx, cfg.d_model))
-        fwd_kw["cross_kv"] = model.cross_kv(params, model.encode(params, audio))
+            jax.random.PRNGKey(1), (batch, cfg.n_audio_ctx, cfg.d_model))
+        kw["cross_kv"] = model.cross_kv(params, model.encode(params, audio))
+    return kw
 
+
+def run_legacy(args, cfg, model, params, dcfg) -> None:
+    fwd_kw = _fwd_kw(cfg, model, params, args.batch)
     rng = jax.random.PRNGKey(args.seed)
     total_tokens = 0
     t_total = 0.0
@@ -81,6 +104,70 @@ def main(argv=None):
         print(f"steady-state TPS: {total_tokens / t_total:.1f} "
               f"(cache={args.cache}, baos={not args.no_baos}, "
               f"kv={args.kv_format}, sampling={args.sampling_fmt})")
+
+
+def make_requests(args, cfg, seed: int) -> list:
+    """Synthetic single-sequence requests; --mixed draws per-request
+    prompt/gen lengths (gen stays a multiple of block_len)."""
+    rs = np.random.RandomState(seed)
+    n = args.requests * args.batch
+    reqs = []
+    for uid in range(n):
+        if args.mixed:
+            p_len = int(rs.randint(max(4, args.prompt_len // 2),
+                                   args.prompt_len + 1))
+            n_blocks = int(rs.randint(1, args.gen_len // args.block_len + 1))
+            g_len = n_blocks * args.block_len
+        else:
+            p_len, g_len = args.prompt_len, args.gen_len
+        prompt = rs.randint(0, cfg.vocab - 2, size=(p_len,)).astype(np.int32)
+        reqs.append(Request(uid=uid, prompt=prompt, gen_length=g_len))
+    return reqs
+
+
+def run_engine(args, cfg, model, params, dcfg) -> None:
+    num_slots = args.slots or args.batch
+    max_seq = args.prompt_len + args.gen_len
+    policy = (get_policy("slowfast", threshold=args.slowfast_threshold)
+              if args.policy == "slowfast" else get_policy(args.policy))
+    reqs = make_requests(args, cfg, args.seed)
+    fwd_kw = _fwd_kw(cfg, model, params, num_slots)
+
+    # warmup run compiles the tick (excluded from the reported numbers)
+    warm = ServingEngine(model, params, dcfg, num_slots=num_slots,
+                         max_seq_len=max_seq, mode=args.mode, policy=policy,
+                         rng=jax.random.PRNGKey(args.seed),
+                         breakdown=args.breakdown, fwd_kw=fwd_kw)
+    warm.run(make_requests(args, cfg, args.seed + 1)[:num_slots])
+    del warm                 # frees the warmup engine's KV pool before timing
+
+    eng = ServingEngine(model, params, dcfg, num_slots=num_slots,
+                        max_seq_len=max_seq, mode=args.mode, policy=policy,
+                        rng=jax.random.PRNGKey(args.seed),
+                        breakdown=args.breakdown, fwd_kw=fwd_kw)
+    completed = eng.run(reqs)
+    for c in completed[: min(8, len(completed))]:
+        print(f"request {c.uid}: P={c.prompt_len} gen={c.gen_length} "
+              f"ticks={c.ticks} latency={c.latency*1e3:.1f}ms")
+    assert len(completed) == len(reqs), "engine dropped requests"
+    for c in completed:
+        n_masked = int((c.tokens[c.prompt_len:] == cfg.mask_id).sum())
+        assert n_masked == 0, f"request {c.uid}: {n_masked} masks left"
+    print(f"engine: slots={num_slots} mode={args.mode} "
+          f"policy={policy.name} pool={eng.pool.stats()}")
+    print(eng.metrics.format_summary())
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    cfg = configs.get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    dcfg = make_dcfg(args)
+    if args.legacy:
+        run_legacy(args, cfg, model, params, dcfg)
+    else:
+        run_engine(args, cfg, model, params, dcfg)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,71 @@
+"""Preallocated KV slot pool for the serving engine.
+
+One pool row (batch index) per serving slot, sized once at engine start for
+(num_slots, max_seq_len) — admission never allocates.  The pool also does
+the slot free-list accounting for cache-free ("none") serving, where no KV
+arrays are held.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+
+
+class CachePool:
+    """Fixed pool of KV cache slots, acquired/released as requests come and go.
+
+    The cache pytree leaves are laid out (n_layers, num_slots, max_seq_len,
+    ...): slot i owns batch row i of every leaf.  Engine ticks run the warm
+    forward over the whole pool batch and store the returned (functionally
+    updated) pytree back via :meth:`update`.
+    """
+
+    def __init__(self, model, num_slots: int, max_seq_len: int,
+                 with_cache: bool = True):
+        self.num_slots = num_slots
+        self.max_seq_len = max_seq_len
+        self.cache: Optional[Any] = (
+            model.init_cache(num_slots, max_seq_len) if with_cache else None)
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self.acquires = 0
+        self.releases = 0
+        self.peak_in_use = 0
+
+    # -- slot accounting ----------------------------------------------------
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_slots - len(self._free)
+
+    def acquire(self) -> int:
+        """Claim a free slot index; raises RuntimeError when the pool is full
+        (the engine checks ``free_slots`` before admitting)."""
+        if not self._free:
+            raise RuntimeError("cache pool exhausted")
+        slot = self._free.pop()
+        self.acquires += 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return slot
+
+    def release(self, slot: int, zero: bool = False) -> None:
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-released")
+        self._free.append(slot)
+        self.releases = self.releases + 1
+        if zero and self.cache is not None:
+            self.cache = jax.tree.map(
+                lambda a: a.at[:, slot].set(0), self.cache)
+
+    def update(self, new_cache) -> None:
+        """Store the functionally-updated cache returned by a warm tick."""
+        self.cache = new_cache
+
+    def stats(self) -> dict:
+        return {"num_slots": self.num_slots, "in_use": self.in_use,
+                "acquires": self.acquires, "releases": self.releases,
+                "peak_in_use": self.peak_in_use}

@@ -1,0 +1,276 @@
+"""Continuous-batching serving engine over the diffusion state machine.
+
+Every engine tick advances *all* active requests by one denoising step with
+a single fused forward + Stable-Max sampling call (core/diffusion
+``batched_tick``), regardless of each request's block index or step within
+the block.  Requests are packed into fixed padded batch slots backed by a
+preallocated KV slot pool; a slot frees (and a queued request admits) the
+moment its request's last block unmasks, so the batch stays full under
+mixed prompt/generation lengths instead of serializing per request.
+
+Tick modes:
+  * ``none``: cache-free full recompute per tick (Block Diffusion).  A
+    one-slot engine in this mode runs the exact jitted computation
+    ``generate(cache_mode='none')`` runs -> bit-identical greedy tokens.
+  * ``warm``: every tick is a warm step through the pooled KV cache — all
+    KV recomputed and rewritten via the BAOS smoothing/quantization path,
+    so serving exercises the paper's quantized-cache attention each step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diffusion, schedule as schedule_lib
+from repro.serving.cache_pool import CachePool
+from repro.serving.metrics import MetricsTracker
+from repro.serving.scheduler import FIFOPolicy, Policy
+
+
+@dataclasses.dataclass
+class Request:
+    """One single-sequence generation request."""
+    uid: int
+    prompt: np.ndarray            # (P,) int32
+    gen_length: int
+    arrival_time: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.prompt).shape[-1])
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.gen_length
+
+
+@dataclasses.dataclass
+class CompletedRequest:
+    uid: int
+    tokens: np.ndarray            # (P + gen,) int32
+    prompt_len: int
+    gen_length: int
+    arrival_time: float
+    admitted_time: float
+    completed_time: float
+    ticks: int
+
+    @property
+    def latency(self) -> float:
+        return self.completed_time - self.arrival_time
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side per-slot resume state (the scalar half of DiffusionState;
+    the array half lives batched in the engine's canvas/pool rows)."""
+    request: Request
+    admitted_time: float
+    block_idx: int = 0
+    step_in_block: int = 0
+    ticks: int = 0
+    last_conf: float = float("-inf")
+    block_masks_left: int = 0
+
+
+class ServingEngine:
+    """Continuous-batching engine: submit() requests, tick() until drained."""
+
+    def __init__(self, model, params, dcfg: diffusion.DiffusionConfig, *,
+                 num_slots: int = 4, max_seq_len: int = 128,
+                 mode: str = "warm", policy: Optional[Policy] = None,
+                 rng: Optional[jax.Array] = None, jit_steps: bool = True,
+                 breakdown: bool = False, fwd_kw: Optional[dict] = None):
+        if mode not in ("warm", "none"):
+            raise ValueError(f"unknown engine mode {mode!r}")
+        self.model = model
+        self.params = params
+        self.dcfg = dcfg
+        self.mode = mode
+        self.num_slots = num_slots
+        self.max_seq_len = max_seq_len
+        self.mask_id = int(model.cfg.mask_id)
+        self.policy = policy or FIFOPolicy()
+        self.breakdown = breakdown
+        self.fwd_kw = dict(fwd_kw or {})
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+        self.pool = CachePool(model, num_slots, max_seq_len,
+                              with_cache=(mode == "warm"))
+        self.slots: List[Optional[_Slot]] = [None] * num_slots
+        self.slot_of_uid: Dict[int, int] = {}
+        self.queue: List[Request] = []
+        self.completed: List[CompletedRequest] = []
+        self.metrics = MetricsTracker(num_slots)
+        self.now = 0.0                      # virtual clock (seconds)
+
+        L, T = dcfg.block_length, dcfg.steps_per_block
+        self._ksched = np.asarray(
+            schedule_lib.linear_unmask_schedule(L, T))        # (T,)
+        self.x = jnp.full((num_slots, max_seq_len), self.mask_id, jnp.int32)
+        pos = np.arange(max_seq_len)
+        # idle rows keep one valid key so their (discarded) attention rows
+        # never produce an all-masked softmax
+        self._valid_np = np.tile(pos < 1, (num_slots, 1))
+        self.kv_valid = jnp.asarray(self._valid_np)
+
+        if breakdown:
+            self._fwd_fn, self._smp_fn = diffusion.get_tick_stage_fns(
+                model, dcfg, self.mask_id, jit_steps)
+            self._tick_fn = None
+        else:
+            self._tick_fn = diffusion.get_tick_fn(
+                model, dcfg, self.mask_id, jit_steps)
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        L = self.dcfg.block_length
+        if request.gen_length <= 0 or request.gen_length % L:
+            raise ValueError(
+                f"gen_length {request.gen_length} must be a positive "
+                f"multiple of block_length {L}")
+        if request.total_len > self.max_seq_len:
+            raise ValueError(
+                f"request length {request.total_len} exceeds engine "
+                f"max_seq_len {self.max_seq_len}")
+        self.queue.append(request)
+        self.metrics.request_arrived(request.uid, request.arrival_time,
+                                     request.gen_length)
+
+    def _admit(self) -> None:
+        while self.pool.free_slots:
+            arrived = [r for r in self.queue if r.arrival_time <= self.now]
+            if not arrived:
+                break
+            pick = arrived[self.policy.select(arrived, self.now)]
+            self.queue.remove(pick)
+            slot = self.pool.acquire()
+            self.slots[slot] = _Slot(
+                request=pick, admitted_time=self.now,
+                block_masks_left=self.dcfg.block_length)
+            self.slot_of_uid[pick.uid] = slot
+            row = np.full((self.max_seq_len,), self.mask_id, np.int32)
+            row[:pick.prompt_len] = np.asarray(pick.prompt, np.int32)
+            self.x = self.x.at[slot].set(jnp.asarray(row))
+            self._valid_np[slot] = np.arange(self.max_seq_len) < pick.total_len
+            self.kv_valid = jnp.asarray(self._valid_np)
+            self.metrics.request_admitted(pick.uid, self.now)
+
+    def _release(self, slot: int, x_host: np.ndarray) -> None:
+        s = self.slots[slot]
+        req = s.request
+        self.completed.append(CompletedRequest(
+            uid=req.uid, tokens=x_host[:req.total_len].copy(),
+            prompt_len=req.prompt_len, gen_length=req.gen_length,
+            arrival_time=req.arrival_time, admitted_time=s.admitted_time,
+            completed_time=self.now, ticks=s.ticks))
+        self.metrics.request_completed(req.uid, self.now, s.ticks)
+        self.slots[slot] = None
+        del self.slot_of_uid[req.uid]
+        self._valid_np[slot] = np.arange(self.max_seq_len) < 1
+        self.kv_valid = jnp.asarray(self._valid_np)
+        self.pool.release(slot)
+
+    # -- stepping -----------------------------------------------------------
+
+    @property
+    def active_slots(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + self.active_slots
+
+    def _next_arrival(self) -> Optional[float]:
+        return min((r.arrival_time for r in self.queue), default=None)
+
+    def tick(self) -> bool:
+        """Admit, run one fused batched step, advance slot states.
+
+        Returns False when there is nothing to do (drained)."""
+        self._admit()
+        if self.active_slots == 0:
+            nxt = self._next_arrival()
+            if nxt is None:
+                return False
+            self.now = max(self.now, nxt)     # fast-forward through idle gap
+            self._admit()
+
+        T = self.dcfg.steps_per_block
+        L = self.dcfg.block_length
+        bs_np = np.zeros((self.num_slots,), np.int32)
+        k_np = np.zeros((self.num_slots,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            bs_np[i] = s.request.prompt_len + s.block_idx * L
+            t = s.step_in_block
+            default_k = int(self._ksched[t]) if t < T else s.block_masks_left
+            k_np[i] = min(self.policy.step_k(s, default_k), L)
+        bs_vec = jnp.asarray(bs_np)
+        k_vec = jnp.asarray(k_np)
+        self.rng, srng = jax.random.split(self.rng)
+        cache = self.pool.cache if self.mode == "warm" else None
+
+        t0 = time.perf_counter()
+        if self.breakdown:
+            logits, new_cache = self._fwd_fn(
+                self.params, self.x, self.kv_valid, bs_vec, cache,
+                **self.fwd_kw)
+            jax.block_until_ready(logits)
+            t1 = time.perf_counter()
+            self.metrics.record_stage("forward", t1 - t0)
+            x_new, conf_min, masks_left = self._smp_fn(
+                logits, self.x, bs_vec, k_vec, srng)
+            jax.block_until_ready(x_new)
+            self.metrics.record_stage("sampling", time.perf_counter() - t1)
+        else:
+            x_new, new_cache, conf_min, masks_left = self._tick_fn(
+                self.params, self.x, self.kv_valid, bs_vec, k_vec, srng,
+                cache, **self.fwd_kw)
+        conf_np = np.asarray(conf_min)        # device sync point
+        masks_np = np.asarray(masks_left)
+        dt = time.perf_counter() - t0
+        self.x = x_new
+        if self.mode == "warm":
+            self.pool.update(new_cache)
+
+        n_active = self.active_slots
+        self.now += dt
+        self.metrics.record_tick(dt, n_active)
+        x_host: Optional[np.ndarray] = None
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            s.ticks += 1
+            if int(masks_np[i]) == 0:         # block fully committed
+                s.block_idx += 1
+                s.step_in_block = 0
+                s.last_conf = float("-inf")
+                s.block_masks_left = L
+                if s.block_idx * L >= s.request.gen_length:
+                    if x_host is None:
+                        x_host = np.asarray(self.x)
+                    self._release(i, x_host[i])
+            else:
+                s.step_in_block += 1
+                s.last_conf = float(conf_np[i])
+                s.block_masks_left = int(masks_np[i])
+        return True
+
+    def run(self, requests: Optional[Sequence[Request]] = None
+            ) -> List[CompletedRequest]:
+        """Submit ``requests`` (if given) and tick until fully drained."""
+        for r in requests or ():
+            self.submit(r)
+        while self.pending:
+            if not self.tick():
+                break
+        self.metrics.elapsed = self.now
+        return self.completed

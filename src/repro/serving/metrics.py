@@ -1,0 +1,111 @@
+"""Latency/throughput tracking for the serving engine.
+
+Per-request records give queueing + end-to-end latency percentiles; per-tick
+records give slot occupancy; optional per-stage device timings reproduce the
+paper's Fig. 1 forward-vs-sampling breakdown for the serving path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    uid: int
+    arrival: float
+    gen_tokens: int
+    admitted: Optional[float] = None
+    completed: Optional[float] = None
+    ticks: int = 0
+
+    @property
+    def latency(self) -> float:
+        return self.completed - self.arrival
+
+    @property
+    def queue_wait(self) -> float:
+        return self.admitted - self.arrival
+
+
+class MetricsTracker:
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.requests: Dict[int, RequestRecord] = {}
+        self.stage_s: Dict[str, float] = defaultdict(float)
+        self._tick_s: List[float] = []
+        self._tick_active: List[int] = []
+        self.elapsed: float = 0.0
+
+    # -- recording ----------------------------------------------------------
+
+    def request_arrived(self, uid: int, arrival: float, gen_tokens: int):
+        self.requests[uid] = RequestRecord(uid, arrival, gen_tokens)
+
+    def request_admitted(self, uid: int, now: float):
+        self.requests[uid].admitted = now
+
+    def request_completed(self, uid: int, now: float, ticks: int):
+        rec = self.requests[uid]
+        rec.completed = now
+        rec.ticks = ticks
+
+    def record_tick(self, seconds: float, active_slots: int):
+        self._tick_s.append(seconds)
+        self._tick_active.append(active_slots)
+
+    def record_stage(self, name: str, seconds: float):
+        self.stage_s[name] += seconds
+
+    # -- aggregation --------------------------------------------------------
+
+    def summary(self) -> dict:
+        done = [r for r in self.requests.values() if r.completed is not None]
+        lat = np.array([r.latency for r in done]) if done else np.zeros(0)
+        wait = np.array([r.queue_wait for r in done]) if done else np.zeros(0)
+        tick_s = np.array(self._tick_s)
+        active = np.array(self._tick_active, dtype=np.float64)
+        busy = float(tick_s.sum())
+        tokens = sum(r.gen_tokens for r in done)
+        occupancy = (float((active * tick_s).sum()) /
+                     (self.num_slots * busy) if busy > 0 else 0.0)
+        out = {
+            "requests_completed": len(done),
+            "gen_tokens": tokens,
+            "ticks": len(tick_s),
+            "busy_s": busy,
+            "elapsed_s": self.elapsed if self.elapsed > 0 else busy,
+            "tokens_per_s": (tokens / self.elapsed if self.elapsed > 0
+                             else (tokens / busy if busy > 0 else 0.0)),
+            "slot_occupancy": occupancy,
+            "latency_p50_s": float(np.percentile(lat, 50)) if done else 0.0,
+            "latency_p99_s": float(np.percentile(lat, 99)) if done else 0.0,
+            "queue_wait_p50_s": float(np.percentile(wait, 50)) if done else 0.0,
+        }
+        total_stage = sum(self.stage_s.values())
+        for name, s in sorted(self.stage_s.items()):
+            out[f"stage_{name}_s"] = s
+            if total_stage > 0:
+                out[f"stage_{name}_frac"] = s / total_stage
+        return out
+
+    def format_summary(self) -> str:
+        s = self.summary()
+        lines = [
+            f"requests: {s['requests_completed']}  "
+            f"ticks: {s['ticks']}  gen tokens: {s['gen_tokens']}",
+            f"steady-state TPS: {s['tokens_per_s']:.1f}  "
+            f"slot occupancy: {s['slot_occupancy'] * 100:.0f}%",
+            f"request latency p50: {s['latency_p50_s'] * 1e3:.1f} ms  "
+            f"p99: {s['latency_p99_s'] * 1e3:.1f} ms  "
+            f"queue wait p50: {s['queue_wait_p50_s'] * 1e3:.1f} ms",
+        ]
+        stages = [(k[len("stage_"):-len("_frac")], v)
+                  for k, v in s.items() if k.endswith("_frac")]
+        if stages:
+            lines.append("stage breakdown: " + "  ".join(
+                f"{name}: {frac * 100:.0f}%" for name, frac in stages))
+        return "\n".join(lines)

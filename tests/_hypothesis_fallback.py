@@ -1,0 +1,64 @@
+"""Minimal stand-in for `hypothesis` when the optional test extra is not
+installed (``pip install -e .[test]`` brings the real engine).
+
+``@given`` reruns the test over deterministic pseudo-random draws from the
+strategy space (seeded per test name), so property tests keep running in
+bare environments — without shrinking or the database, but with the same
+assertions exercised.  Only the strategy surface this repo uses is
+implemented: integers, floats, sampled_from, booleans.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class st:  # noqa: N801 - mirrors `hypothesis.strategies` import alias
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda r: options[r.randrange(len(options))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    """Applied above @given: records max_examples on the given-wrapper."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_EXAMPLES)
+            rnd = random.Random(fn.__qualname__)      # deterministic per test
+            for _ in range(n):
+                fn(*[s.draw(rnd) for s in strategies])
+        # hide the strategy params from pytest's fixture resolution
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

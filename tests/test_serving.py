@@ -1,0 +1,250 @@
+"""Serving engine: state machine resumability, engine/generate equivalence,
+continuous batching, slot-pool reuse, and scheduler policies."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.core import diffusion
+from repro.models.registry import build_model
+from repro.serving import (CachePool, FIFOPolicy, Request, ServingEngine,
+                           ShortestGenFirstPolicy, SlowFastPolicy, get_policy)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = base.get_config("llada-8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompt(cfg, seed, n):
+    return jax.random.randint(jax.random.PRNGKey(seed), (1, n), 0,
+                              cfg.vocab - 2)
+
+
+def _dcfg(cache="none", gen=16, block=8, steps=4):
+    return diffusion.DiffusionConfig(gen_length=gen, block_length=block,
+                                     steps_per_block=steps, cache_mode=cache)
+
+
+# ---------------------------------------------------------------------------
+# State machine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cache", ["none", "prefix", "dual"])
+def test_manual_stepping_matches_generate(setup, cache):
+    """Driving (init_state, step) by hand reproduces generate() exactly and
+    exposes the per-step counters a serving engine needs."""
+    cfg, model, params = setup
+    dcfg = _dcfg(cache)
+    prompt = _prompt(cfg, 1, 16)
+    ref = diffusion.generate(model, params, prompt, dcfg,
+                             rng=jax.random.PRNGKey(7))
+    state = diffusion.init_state(model, prompt, dcfg,
+                                 rng=jax.random.PRNGKey(7))
+    seen = []
+    while not state.done:
+        seen.append((state.block_idx, state.step_in_block))
+        state = diffusion.step(model, params, state)
+    assert seen == [(b, t) for b in range(2) for t in range(4)]
+    np.testing.assert_array_equal(np.asarray(state.tokens), np.asarray(ref))
+    with pytest.raises(ValueError):
+        diffusion.step(model, params, state)
+
+
+def test_state_is_resumable_mid_block(setup):
+    """A state captured mid-request continues to the same tokens as an
+    uninterrupted run (the property continuous batching relies on)."""
+    cfg, model, params = setup
+    dcfg = _dcfg("dual")
+    prompt = _prompt(cfg, 2, 16)
+    s1 = diffusion.init_state(model, prompt, dcfg, rng=jax.random.PRNGKey(3))
+    for _ in range(3):                    # stop mid-block (T=4)
+        s1 = diffusion.step(model, params, s1)
+    snapshot = dataclasses.replace(s1)
+    while not s1.done:
+        s1 = diffusion.step(model, params, s1)
+    s2 = snapshot
+    while not s2.done:
+        s2 = diffusion.step(model, params, s2)
+    np.testing.assert_array_equal(np.asarray(s1.x), np.asarray(s2.x))
+
+
+# ---------------------------------------------------------------------------
+# Engine vs generate()
+# ---------------------------------------------------------------------------
+
+def test_engine_bit_identical_to_generate_single_request(setup):
+    """Acceptance: a one-slot engine (no padding) produces tokens
+    bit-identical to generate() for a greedy request — both run the same
+    jitted batched_tick executable."""
+    cfg, model, params = setup
+    dcfg = _dcfg("none")
+    prompt = _prompt(cfg, 5, 16)
+    ref = diffusion.generate(model, params, prompt, dcfg,
+                             rng=jax.random.PRNGKey(11))
+    eng = ServingEngine(model, params, dcfg, num_slots=1, max_seq_len=32,
+                        mode="none", rng=jax.random.PRNGKey(99))
+    done = eng.run([Request(uid=0, prompt=np.asarray(prompt[0]),
+                            gen_length=16)])
+    assert len(done) == 1
+    np.testing.assert_array_equal(done[0].tokens, np.asarray(ref[0]))
+
+
+@pytest.mark.parametrize("mode", ["none", "warm"])
+def test_engine_multi_request_mixed_lengths(setup, mode):
+    """Mixed prompt/gen lengths interleave in shared ticks: every request
+    completes fully unmasked with its prompt intact, and requests overlap
+    (total ticks < sum of per-request ticks)."""
+    cfg, model, params = setup
+    dcfg = _dcfg("dual" if mode == "warm" else "none")
+    eng = ServingEngine(model, params, dcfg, num_slots=2, max_seq_len=48,
+                        mode=mode, rng=jax.random.PRNGKey(0))
+    rs = np.random.RandomState(0)
+    reqs = [Request(uid=i,
+                    prompt=rs.randint(0, cfg.vocab - 2,
+                                      size=(8 + 4 * i,)).astype(np.int32),
+                    gen_length=8 * (1 + i % 2))
+            for i in range(4)]
+    done = eng.run(list(reqs))
+    assert len(done) == 4
+    by_uid = {c.uid: c for c in done}
+    total_req_ticks = 0
+    for r in reqs:
+        c = by_uid[r.uid]
+        np.testing.assert_array_equal(c.tokens[:r.prompt_len], r.prompt)
+        assert not (c.tokens[r.prompt_len:] == cfg.mask_id).any()
+        total_req_ticks += c.ticks
+    assert eng.metrics.summary()["ticks"] < total_req_ticks
+
+
+def test_engine_queues_beyond_slots_and_reuses_pool(setup):
+    """More requests than slots: the queue drains through slot reuse and
+    the pool acquire/release accounting balances."""
+    cfg, model, params = setup
+    dcfg = _dcfg("dual", gen=8)
+    eng = ServingEngine(model, params, dcfg, num_slots=2, max_seq_len=24,
+                        mode="warm", rng=jax.random.PRNGKey(0))
+    reqs = [Request(uid=i, prompt=np.asarray(_prompt(cfg, 20 + i, 8)[0]),
+                    gen_length=8) for i in range(5)]
+    done = eng.run(reqs)
+    assert len(done) == 5
+    stats = eng.pool.stats()
+    assert stats == {"num_slots": 2, "in_use": 0, "acquires": 5,
+                     "releases": 5, "peak_in_use": 2}
+    for c in done:
+        assert not (c.tokens[c.prompt_len:] == cfg.mask_id).any()
+
+
+def test_engine_rejects_invalid_requests(setup):
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, _dcfg("none"), num_slots=1,
+                        max_seq_len=32, mode="none")
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=0, prompt=np.zeros(8, np.int32),
+                           gen_length=12))      # not a block multiple
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=1, prompt=np.zeros(30, np.int32),
+                           gen_length=16))      # exceeds max_seq_len
+
+
+# ---------------------------------------------------------------------------
+# Cache pool
+# ---------------------------------------------------------------------------
+
+def test_cache_pool_accounting(setup):
+    cfg, model, params = setup
+    pool = CachePool(model, num_slots=3, max_seq_len=16)
+    assert pool.cache["k"].shape[1] == 3        # one row per slot
+    a = pool.acquire()
+    b = pool.acquire()
+    assert {a, b} == {0, 1} and pool.in_use == 2
+    pool.release(a)
+    with pytest.raises(ValueError):
+        pool.release(a)                          # double release
+    assert pool.acquire() == a                   # freed slot is reused
+    pool2 = CachePool(model, num_slots=1, max_seq_len=8, with_cache=False)
+    assert pool2.cache is None and pool2.free_slots == 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduler policies
+# ---------------------------------------------------------------------------
+
+def test_policy_admission_ordering():
+    q = [Request(uid=0, prompt=np.zeros(4, np.int32), gen_length=32),
+         Request(uid=1, prompt=np.zeros(4, np.int32), gen_length=8),
+         Request(uid=2, prompt=np.zeros(4, np.int32), gen_length=16)]
+    assert FIFOPolicy().select(q, 0.0) == 0
+    assert ShortestGenFirstPolicy().select(q, 0.0) == 1
+    assert get_policy("sjf").name == "sgf"
+    with pytest.raises(ValueError):
+        get_policy("nope")
+
+
+def test_sgf_policy_orders_engine_admissions(setup):
+    """With 1 slot, shortest-gen-first admits the short queued request
+    before the longer one that arrived earlier."""
+    cfg, model, params = setup
+    dcfg = _dcfg("none", gen=8)
+    eng = ServingEngine(model, params, dcfg, num_slots=1, max_seq_len=40,
+                        mode="none", policy=ShortestGenFirstPolicy())
+    reqs = [Request(uid=0, prompt=np.asarray(_prompt(cfg, 30, 8)[0]),
+                    gen_length=8),
+            Request(uid=1, prompt=np.asarray(_prompt(cfg, 31, 8)[0]),
+                    gen_length=32),
+            Request(uid=2, prompt=np.asarray(_prompt(cfg, 32, 8)[0]),
+                    gen_length=8)]
+    done = eng.run(reqs)
+    order = [c.uid for c in done]
+    assert order == [0, 2, 1]                   # uid=2 jumps the long uid=1
+
+
+def test_slowfast_early_exit_reduces_ticks(setup):
+    """threshold=-inf-like (0.0) always triggers after the first step of a
+    block, so each block finishes in 2 ticks instead of steps_per_block."""
+    cfg, model, params = setup
+    dcfg = _dcfg("none", gen=16, block=8, steps=8)
+    prompt = np.asarray(_prompt(cfg, 40, 8)[0])
+
+    def run(policy):
+        eng = ServingEngine(model, params, dcfg, num_slots=1, max_seq_len=24,
+                            mode="none", policy=policy,
+                            rng=jax.random.PRNGKey(0))
+        done = eng.run([Request(uid=0, prompt=prompt, gen_length=16)])
+        assert not (done[0].tokens[8:] == cfg.mask_id).any()
+        return done[0].ticks
+
+    default_ticks = run(FIFOPolicy())
+    fast_ticks = run(SlowFastPolicy(threshold=0.0))
+    assert default_ticks == 2 * 8               # num_blocks * steps_per_block
+    assert fast_ticks == 2 * 2                  # 1 probe + 1 flush per block
+    strict_ticks = run(SlowFastPolicy(threshold=2.0))  # conf <= 1 never fires
+    assert strict_ticks == default_ticks
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_summary_fields(setup):
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, _dcfg("none", gen=8), num_slots=2,
+                        max_seq_len=24, mode="none", breakdown=True)
+    reqs = [Request(uid=i, prompt=np.asarray(_prompt(cfg, 50 + i, 8)[0]),
+                    gen_length=8, arrival_time=0.0) for i in range(3)]
+    eng.run(reqs)
+    s = eng.metrics.summary()
+    assert s["requests_completed"] == 3
+    assert s["gen_tokens"] == 24
+    assert s["tokens_per_s"] > 0
+    assert 0 < s["slot_occupancy"] <= 1
+    assert s["latency_p99_s"] >= s["latency_p50_s"] > 0
+    assert s["stage_forward_s"] > 0 and s["stage_sampling_s"] > 0
+    text = eng.metrics.format_summary()
+    assert "steady-state TPS" in text and "p99" in text
