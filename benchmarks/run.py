@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   fig9_dse             design-space sweep (VLEN/MLEN/BLEN)
   roofline_report      §Roofline tables from the dry-run artifacts
   serve_engine         continuous-batching engine vs legacy serving TPS
+  fused_head           fused LM-head+Stable-Max vs unfused: wall-clock +
+                       modeled HBM bytes (emits BENCH_fused_head.json)
 """
 from __future__ import annotations
 
@@ -23,6 +25,7 @@ MODULES = [
     "fig1_breakdown", "fig7_sampling_sweeps", "table2_hbm",
     "table3_pipeline", "table4_crossval", "table5_quant",
     "table6_end2end", "fig9_dse", "roofline_report", "serve_engine",
+    "fused_head",
 ]
 
 

@@ -35,6 +35,16 @@ class DiffusionConfig:
     block_length: int = 32
     steps_per_block: int = 8
     cache_mode: str = "dual"          # none | prefix | dual
+    # LM-head routing for the sampling stage (docs/fused_sampling.md):
+    #   fused   — stream the head GEMM into the online Stable-Max reduction
+    #             (logits never in HBM); greedy tokens bit-identical to
+    #             the unfused path (pinned by tests/test_fused_head.py)
+    #   unfused — slice active-block hidden states (B, L, d) first, then
+    #             materialize at most (B, L, V) block logits
+    #   legacy  — pre-head-fusion behavior: full logits out of forward()
+    # Models without supports_head_mode silently fall back to "legacy".
+    head_path: str = "fused"
+    head_chunk: int = 4096            # vocab tile width of the fused stream
     sampling: sampling_lib.SamplingConfig = sampling_lib.SamplingConfig()
     baos: baos_lib.BAOSConfig = baos_lib.BAOSConfig(enabled=False)
 
@@ -42,6 +52,18 @@ class DiffusionConfig:
     def num_blocks(self) -> int:
         assert self.gen_length % self.block_length == 0
         return self.gen_length // self.block_length
+
+
+def head_feed_mode(model, dcfg: "DiffusionConfig") -> str:
+    """Resolve the sampling-stage feed for ``model``: 'fused'/'unfused'
+    (active blocks sliced at the hidden level, head applied after) or
+    'logits' (legacy full-logits forward) for models without head_mode."""
+    if dcfg.head_path not in ("fused", "unfused", "legacy"):
+        raise ValueError(f"unknown head_path {dcfg.head_path!r}")
+    if dcfg.head_path != "legacy" and getattr(model, "supports_head_mode",
+                                              False):
+        return dcfg.head_path
+    return "logits"
 
 
 # ---------------------------------------------------------------------------
@@ -55,35 +77,40 @@ def _active_mask(batch: int, s_tot: int, block_start, block_len: int):
 
 
 def warm_step(model, params, x: jax.Array, cache, block_start,
-              dcfg: DiffusionConfig, **fwd_kw):
-    """Full-sequence forward; returns (active-block logits, new cache)."""
+              dcfg: DiffusionConfig, head_mode: str = "logits", **fwd_kw):
+    """Full-sequence forward; returns (active-block logits — or, with
+    ``head_mode='hidden'``, pre-head hidden states (B, L, d) — new cache)."""
     B, s_tot = x.shape
     L = dcfg.block_length
     calib_mask = (_active_mask(B, s_tot, block_start, L)
                   if dcfg.baos.calib_scope == "active_block" else None)
-    logits, cache, _ = model.forward(
+    extra = {} if head_mode == "logits" else {"head_mode": head_mode}
+    feats, cache, _ = model.forward(
         params, tokens=x, cache=cache, seg_start=0,
         baos_cfg=dcfg.baos, calibrate=True, calib_mask=calib_mask,
-        logits_slice=(block_start, L), **fwd_kw)
-    return logits, cache
+        logits_slice=(block_start, L), **extra, **fwd_kw)
+    return feats, cache
 
 
 def refine_step(model, params, x: jax.Array, cache, block_start,
-                dcfg: DiffusionConfig, suffix_len: int = 0, **fwd_kw):
+                dcfg: DiffusionConfig, suffix_len: int = 0,
+                head_mode: str = "logits", **fwd_kw):
     """One refinement forward (paper Fig. 4).
 
     dual:   segment = active block (suffix_len = 0)
     prefix: segment = active block + suffix (suffix_len = s_tot - end)
-    Returns (active-block logits, new cache).
+    Returns (active-block logits or hidden states per ``head_mode``,
+    new cache).
     """
     L = dcfg.block_length
     seg_len = L + suffix_len
     seg = jax.lax.dynamic_slice_in_dim(x, block_start, seg_len, axis=1)
-    logits, cache, _ = model.forward(
+    extra = {} if head_mode == "logits" else {"head_mode": head_mode}
+    feats, cache, _ = model.forward(
         params, tokens=seg, cache=cache, seg_start=block_start,
         baos_cfg=dcfg.baos, calibrate=False,
-        logits_slice=(0, L), **fwd_kw)
-    return logits, cache
+        logits_slice=(0, L), **extra, **fwd_kw)
+    return feats, cache
 
 
 # ---------------------------------------------------------------------------
@@ -146,26 +173,63 @@ def init_state(model, prompt: jax.Array, dcfg: DiffusionConfig,
         ks=ks, dcfg=dcfg, mask_id=mask_id, prompt_len=P)
 
 
-def _commit_block(logits, x, bs, k, step_rng, dcfg: DiffusionConfig,
-                  mask_id: int):
-    """Stable-Max sample the active block and write it back into the canvas."""
-    L = dcfg.block_length
-    xa = jax.lax.dynamic_slice_in_dim(x, bs, L, axis=1)
-    xa_new, _ = sampling_lib.sampling_step(
+def _active_sampling_step(feats, xa, k, step_rng, params, mode: str,
+                          dcfg: DiffusionConfig, mask_id: int, model,
+                          quant=None):
+    """Route one active block through the selected head path.
+
+    feats is (B, L, V) block logits (mode='logits') or (B, L, d) pre-head
+    hidden states (mode 'fused'/'unfused').  Returns the full
+    (new tokens, transfer, conf) triple of ``sampling_step_full``."""
+    if mode == "logits":
+        return sampling_lib.sampling_step_full(
+            feats, xa, mask_id, k, dcfg.sampling, step_rng)
+    scale = float(model.cfg.logit_scale)
+    if mode == "fused":
+        return sampling_lib.fused_sampling_step_full(
+            feats, params["lm_head"], xa, mask_id, k, dcfg.sampling,
+            step_rng, logit_scale=scale, quant=quant,
+            chunk_v=dcfg.head_chunk)
+    # unfused fallback: head applied *after* the (B, L, d) slice, so at
+    # most (B, L, V) block logits ever exist (never (B, S, V))
+    logits = sampling_lib.head_logits(
+        feats, params["lm_head"], logit_scale=scale, quant=quant)
+    return sampling_lib.sampling_step_full(
         logits, xa, mask_id, k, dcfg.sampling, step_rng)
-    return jax.lax.dynamic_update_slice_in_dim(x, xa_new, bs, axis=1)
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_commit_fn(model, dcfg: DiffusionConfig, mask_id: int, mode: str,
+                      quant, jit_steps: bool):
+    """Jitted active-block commit (head + Stable-Max + scatter-back) shared
+    across generate() calls and serving engines, keyed like the step fns."""
+    L = dcfg.block_length
+
+    def commit(params, feats, x, bs, k, step_rng):
+        xa = jax.lax.dynamic_slice_in_dim(x, bs, L, axis=1)
+        xa_new, _, _ = _active_sampling_step(
+            feats, xa, k, step_rng, params, mode, dcfg, mask_id, model,
+            quant=quant)
+        return jax.lax.dynamic_update_slice_in_dim(x, xa_new, bs, axis=1)
+
+    return jax.jit(commit) if jit_steps else commit
 
 
 @functools.lru_cache(maxsize=64)
 def _cached_step_fn(model, dcfg: DiffusionConfig, kind: str, suffix_len: int,
-                    jit_steps: bool):
+                    jit_steps: bool, head_mode: str = "logits", quant=None):
     """Per-(model, dcfg) jitted forward for one step kind.  Cached at module
-    level so generate() calls and long-lived serving engines share compiles."""
+    level so generate() calls and long-lived serving engines share compiles.
+    The GEMM-boundary ``quant`` policy is part of the cache key and bound
+    statically — a QuantPolicy is not a jax type and must never reach a
+    jitted function as a runtime argument."""
     if kind == "warm":
-        fn = functools.partial(warm_step, model, dcfg=dcfg)
+        fn = functools.partial(warm_step, model, dcfg=dcfg,
+                               head_mode=head_mode, quant=quant)
     elif kind == "refine":
         fn = functools.partial(refine_step, model, dcfg=dcfg,
-                               suffix_len=suffix_len)
+                               suffix_len=suffix_len, head_mode=head_mode,
+                               quant=quant)
     else:
         raise ValueError(kind)
     return jax.jit(fn) if jit_steps else fn
@@ -188,22 +252,33 @@ def step(model, params, state: DiffusionState, jit_steps: bool = True,
     t = state.step_in_block
     rng, srng = jax.random.split(state.rng)
     cache = state.cache
+    # bind the (hashable, non-jax-type) quant policy statically into the
+    # cached jitted fns instead of letting it ride **fwd_kw into jit
+    fwd_kw = dict(fwd_kw)
+    quant = fwd_kw.pop("quant", None)
 
     if dcfg.cache_mode == "none":
-        tick = get_tick_fn(model, dcfg, state.mask_id, jit_steps=jit_steps)
+        tick = get_tick_fn(model, dcfg, state.mask_id, jit_steps=jit_steps,
+                           quant=quant)
         x, _, _, _ = tick(params, state.x,
                           jnp.ones((B, s_tot), bool),
                           jnp.full((B,), bs, jnp.int32),
                           state.ks[:, t], srng, None, **fwd_kw)
     else:
+        mode = head_feed_mode(model, dcfg)
+        head_mode = "logits" if mode == "logits" else "hidden"
         if t == 0:
-            fn = _cached_step_fn(model, dcfg, "warm", 0, jit_steps)
+            fn = _cached_step_fn(model, dcfg, "warm", 0, jit_steps,
+                                 head_mode, quant)
         else:
             suffix = (s_tot - (bs + L)) if dcfg.cache_mode == "prefix" else 0
-            fn = _cached_step_fn(model, dcfg, "refine", suffix, jit_steps)
-        logits, cache = fn(params, state.x, cache, jnp.int32(bs), **fwd_kw)
-        x = _commit_block(logits, state.x, jnp.int32(bs), state.ks[:, t],
-                          srng, dcfg, state.mask_id)
+            fn = _cached_step_fn(model, dcfg, "refine", suffix, jit_steps,
+                                 head_mode, quant)
+        feats, cache = fn(params, state.x, cache, jnp.int32(bs), **fwd_kw)
+        commit = _cached_commit_fn(model, dcfg, state.mask_id, mode,
+                                   quant, jit_steps)
+        x = commit(params, feats, state.x, jnp.int32(bs), state.ks[:, t],
+                   srng)
 
     t += 1
     block_idx = state.block_idx
@@ -237,38 +312,47 @@ def generate(model, params, prompt: jax.Array, dcfg: DiffusionConfig,
 
 def tick_forward(model, params, x: jax.Array, kv_valid: jax.Array,
                  block_start: jax.Array, cache, dcfg: DiffusionConfig,
-                 **fwd_kw):
+                 quant=None, **fwd_kw):
     """Forward half of a serving tick over per-row block offsets.
 
     Without ``cache`` this is the Block-Diffusion full recompute
     (cache_mode='none'); with it, a warm step per tick: all KV is recomputed
     and rewritten through the BAOS smoothing/quantization path, so attention
     reads the same quantized cache the paper's warm step produces.
-    Returns the *full-sequence* logits (per-row slicing happens in
-    ``tick_sample`` because block_start differs per row).
+
+    For head-mode-capable models this returns the *full-sequence hidden
+    states* (B, S, d) — the LM head runs after the per-row active-block
+    slice in ``tick_sample``, so vocab-wide logits are at most (B, L, V)
+    (unfused) or never materialized at all (fused).  Legacy models return
+    full-sequence logits as before.
     """
     B, s_tot = x.shape
     L = dcfg.block_length
+    mode = head_feed_mode(model, dcfg)
+    extra = {} if mode == "logits" else {"head_mode": "hidden"}
     if cache is None:
-        logits, _, _ = model.forward(
+        feats, _, _ = model.forward(
             params, tokens=x, cache=None, seg_start=0, kv_valid=kv_valid,
-            **fwd_kw)
-        return logits, None
+            quant=quant, **extra, **fwd_kw)
+        return feats, None
     calib_mask = None
     if dcfg.baos.calib_scope == "active_block":
         pos = jnp.arange(s_tot, dtype=jnp.int32)[None, :]
         calib_mask = ((pos >= block_start[:, None]) &
                       (pos < block_start[:, None] + L))
-    logits, new_cache, _ = model.forward(
+    feats, new_cache, _ = model.forward(
         params, tokens=x, cache=cache, seg_start=0, kv_valid=kv_valid,
-        baos_cfg=dcfg.baos, calibrate=True, calib_mask=calib_mask, **fwd_kw)
-    return logits, new_cache
+        baos_cfg=dcfg.baos, calibrate=True, calib_mask=calib_mask,
+        quant=quant, **extra, **fwd_kw)
+    return feats, new_cache
 
 
-def tick_sample(logits: jax.Array, x: jax.Array, block_start: jax.Array,
-                k: jax.Array, srng: jax.Array, dcfg: DiffusionConfig,
-                mask_id: int):
-    """Sampling half of a serving tick: per-row active-block slice,
+def tick_sample(params, feats: jax.Array, x: jax.Array,
+                block_start: jax.Array, k: jax.Array, srng: jax.Array,
+                dcfg: DiffusionConfig, mask_id: int, model=None, quant=None):
+    """Sampling half of a serving tick: per-row active-block slice at the
+    *hidden* level (B, L, d) for head-capable models, then the selected
+    head path (fused streamed head / unfused block logits / legacy), the
     Stable-Max commit of k tokens (k=0 rows are no-ops), scatter back.
 
     Returns (x_new, conf_min, masks_left) where conf_min is the minimum
@@ -277,14 +361,15 @@ def tick_sample(logits: jax.Array, x: jax.Array, block_start: jax.Array,
     positions remaining in each row's active block.
     """
     L = dcfg.block_length
+    mode = head_feed_mode(model, dcfg) if model is not None else "logits"
 
     def row_slice(a, s):
         return jax.lax.dynamic_slice_in_dim(a, s, L, axis=0)
 
-    la = jax.vmap(row_slice)(logits, block_start)
+    fa = jax.vmap(row_slice)(feats, block_start)   # (B, L, d) or (B, L, V)
     xa = jax.vmap(row_slice)(x, block_start)
-    xa_new, transfer, conf = sampling_lib.sampling_step_full(
-        la, xa, mask_id, k, dcfg.sampling, srng)
+    xa_new, transfer, conf = _active_sampling_step(
+        fa, xa, k, srng, params, mode, dcfg, mask_id, model, quant=quant)
     x_new = jax.vmap(
         lambda row, upd, s: jax.lax.dynamic_update_slice_in_dim(
             row, upd, s, axis=0))(x, xa_new, block_start)
@@ -294,35 +379,44 @@ def tick_sample(logits: jax.Array, x: jax.Array, block_start: jax.Array,
 
 
 def batched_tick(model, params, x, kv_valid, block_start, k, srng, cache,
-                 dcfg: DiffusionConfig = None, mask_id: int = 0, **fwd_kw):
+                 dcfg: DiffusionConfig = None, mask_id: int = 0, quant=None,
+                 **fwd_kw):
     """One fused engine tick: single forward + single Stable-Max sampling
     call over all serving slots.  Also the cache_mode='none' step of the
     state machine (block_start broadcast), so a one-slot engine runs the
     exact computation ``generate()`` runs — bit-identical greedy tokens."""
-    logits, new_cache = tick_forward(model, params, x, kv_valid, block_start,
-                                     cache, dcfg, **fwd_kw)
-    x_new, conf_min, masks_left = tick_sample(logits, x, block_start, k,
-                                              srng, dcfg, mask_id)
+    feats, new_cache = tick_forward(model, params, x, kv_valid, block_start,
+                                    cache, dcfg, quant=quant, **fwd_kw)
+    x_new, conf_min, masks_left = tick_sample(
+        params, feats, x, block_start, k, srng, dcfg, mask_id, model=model,
+        quant=quant)
     return x_new, new_cache, conf_min, masks_left
 
 
 @functools.lru_cache(maxsize=32)
 def get_tick_fn(model, dcfg: DiffusionConfig, mask_id: int,
-                jit_steps: bool = True):
+                jit_steps: bool = True, quant=None):
     """Jitted ``batched_tick`` shared by generate() and the serving engine
-    (same (model, dcfg) key -> same compiled executable)."""
-    fn = functools.partial(batched_tick, model, dcfg=dcfg, mask_id=mask_id)
+    (same (model, dcfg) key -> same compiled executable).  ``quant`` is
+    bound statically (QuantPolicy is not a jax type)."""
+    fn = functools.partial(batched_tick, model, dcfg=dcfg, mask_id=mask_id,
+                           quant=quant)
     return jax.jit(fn) if jit_steps else fn
 
 
 @functools.lru_cache(maxsize=32)
 def get_tick_stage_fns(model, dcfg: DiffusionConfig, mask_id: int,
-                       jit_steps: bool = True):
+                       jit_steps: bool = True, quant=None):
     """(forward, sampling) jitted separately — the engine's per-stage
     latency-breakdown mode (Fig. 1 attribution); math identical to the
-    fused tick."""
-    fwd = functools.partial(tick_forward, model, dcfg=dcfg)
-    smp = functools.partial(tick_sample, dcfg=dcfg, mask_id=mask_id)
+    fused tick.  The sampling stage owns the LM head for head-capable
+    models (the paper's sampling engine owns the vocab traffic), so its
+    signature is (params, feats, x, block_start, k, srng); the GEMM-boundary
+    ``quant`` policy is bound statically so the staged head quantizes
+    exactly like the fused tick's."""
+    fwd = functools.partial(tick_forward, model, dcfg=dcfg, quant=quant)
+    smp = functools.partial(tick_sample, dcfg=dcfg, mask_id=mask_id,
+                            model=model, quant=quant)
     if jit_steps:
         fwd, smp = jax.jit(fwd), jax.jit(smp)
     return fwd, smp

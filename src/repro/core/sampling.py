@@ -12,6 +12,11 @@ kernel (kernels/stablemax_sampling.py) implements with VMEM chunking.
 
 This module provides
   * the pure-jnp reference used as the kernels' oracle,
+  * the **fused LM-head + Stable-Max** path (``fused_head_stable_max`` /
+    ``fused_sampling_step_full``): the head GEMM is streamed vocab-chunk by
+    vocab-chunk straight into the online (m, argmax, exp-sum) reduction so
+    the (R, V) logits tensor is *never materialized* — HBM traffic drops
+    from O(R*V) to O(R*d + d*V) (docs/fused_sampling.md),
   * the *vocab-sharded* combine used under the production mesh (model-axis
     sharded LM head -> per-shard (m, idx, S) triples merged with one tiny
     collective; the cross-chip analogue of the paper's V_chunk streaming),
@@ -99,25 +104,244 @@ def local_partials(logits_shard: jax.Array, fmt: str = "none"):
     return m, idx, s
 
 
-def sharded_stable_max(logits_shard: jax.Array, axis_name: str,
-                       fmt: str = "none") -> Tuple[jax.Array, jax.Array]:
-    """Stable-Max over a vocab axis sharded on ``axis_name``.
-
-    Combine rule (DESIGN.md §7.2):  m = max_i m_i,
-    S = sum_i S_i * exp(m_i - m), idx from the shard owning the global max
-    (lowest shard index breaks ties).  One pmax + one psum + one pmin of
-    scalars per position — O(V/n_shards) logit traffic per chip.
-    """
-    shard = jax.lax.axis_index(axis_name)
-    vloc = logits_shard.shape[-1]
-    m, idx, s = local_partials(logits_shard, fmt)
-    gidx = idx + shard * vloc
+def combine_partials(m: jax.Array, gidx: jax.Array, s: jax.Array,
+                     axis_name: str) -> Tuple[jax.Array, jax.Array]:
+    """Merge per-shard (m, global idx, s) Stable-Max partials over
+    ``axis_name``:  m = max_i m_i, S = sum_i S_i * exp(m_i - m), idx from
+    the shard owning the global max (lowest shard index breaks ties).
+    One pmax + one psum + one pmin of scalars per position."""
     gm = jax.lax.pmax(m, axis_name)
     gs = jax.lax.psum(s * jnp.exp(m - gm), axis_name)
     big = jnp.int32(2 ** 30)
     cand = jnp.where(m >= gm, gidx, big)
     gi = jax.lax.pmin(cand, axis_name)
     return 1.0 / gs, gi.astype(jnp.int32)
+
+
+def sharded_stable_max(logits_shard: jax.Array, axis_name: str,
+                       fmt: str = "none") -> Tuple[jax.Array, jax.Array]:
+    """Stable-Max over a vocab axis sharded on ``axis_name``.
+
+    Combine rule (DESIGN.md §7.2): see ``combine_partials`` —
+    O(V/n_shards) logit traffic per chip.
+    """
+    shard = jax.lax.axis_index(axis_name)
+    vloc = logits_shard.shape[-1]
+    m, idx, s = local_partials(logits_shard, fmt)
+    return combine_partials(m, idx + shard * vloc, s, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Fused LM-head + Stable-Max (logits never materialized; docs/fused_sampling.md)
+# ---------------------------------------------------------------------------
+
+def _mix32(x: jax.Array) -> jax.Array:
+    """splitmix-style uint32 finalizer (avalanching integer hash)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def counter_gumbel(seed: jax.Array, rows: jax.Array, cols: jax.Array
+                   ) -> jax.Array:
+    """Deterministic counter-based Gumbel(0,1) noise g(seed, row, col).
+
+    Shared by the fused-head oracle and the Pallas kernel so both draw the
+    *same* per-(row, token) noise tile-by-tile without ever materializing a
+    (R, V) noise tensor (a stateless analogue of jax's threefry draw)."""
+    h = _mix32(rows.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+               ^ seed.astype(jnp.uint32))
+    h = _mix32(h ^ cols.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B))
+    u = ((h >> jnp.uint32(8)).astype(jnp.float32) + 0.5) * (1.0 / (1 << 24))
+    return -jnp.log(-jnp.log(u))
+
+
+def gumbel_seed(rng: jax.Array) -> jax.Array:
+    """Fold a PRNG key into the uint32 seed of the counter-Gumbel stream."""
+    return jax.random.bits(jax.random.fold_in(rng, 0x5A11), (), jnp.uint32)
+
+
+def head_logits(hidden: jax.Array, w_head: jax.Array, *,
+                logit_scale: float = 1.0, quant=None) -> jax.Array:
+    """hidden (..., d) @ w_head (d, V) -> logits (..., V) in hidden.dtype.
+
+    Bit-for-bit mirror of the in-model LM head (layers.qdot + logit_scale):
+    f32 accumulation, cast back to the activation dtype, then scale.  Used
+    by the unfused block-sliced fallback and, chunk-by-chunk, by the fused
+    oracle — chunking the N axis leaves each output element's K-reduction
+    untouched, which is what keeps fused and unfused greedy tokens
+    bit-identical."""
+    if quant is not None and quant.enabled:
+        hidden, w_head = quant.acts(hidden), quant.weights(w_head)
+    z = jax.lax.dot_general(
+        hidden, w_head.astype(hidden.dtype),
+        (((hidden.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return z.astype(hidden.dtype) * logit_scale
+
+
+def _chunk_grid(V: int, chunk_v: int) -> Tuple[int, int]:
+    """(chunk, padded V): chunks are rounded down to multiples of the MX
+    block (min one block) so per-chunk fake-quant sees the exact 32-wide
+    blocks full-row fake-quant sees; shared by the jnp oracle and the
+    Pallas kernel so both tile the vocab identically."""
+    chunk_v = max(mx.MX_BLOCK, chunk_v - chunk_v % mx.MX_BLOCK)
+    ceil32 = -(-V // mx.MX_BLOCK) * mx.MX_BLOCK
+    chunk = min(chunk_v, ceil32)
+    return chunk, -(-V // chunk) * chunk
+
+
+def _prep_stream(hidden: jax.Array, w: jax.Array, chunk_v: int, quant):
+    """Shared prologue of the streamed-head scans: chunk grid, zero-pad the
+    vocab tail (zero weight columns -> exact-zero logits, masked later),
+    apply the GEMM-boundary quant policy once."""
+    V = w.shape[-1]
+    chunk, Vp = _chunk_grid(V, chunk_v)
+    if Vp != V:
+        w = jnp.pad(w, ((0, 0), (0, Vp - V)))
+    if quant is not None and quant.enabled:
+        hidden, w = quant.acts(hidden), quant.weights(w)
+    return hidden, w, V, chunk, Vp // chunk
+
+
+def _stream_chunk(h, w_pad, c, chunk, V, fmt, logit_scale, suppress_id,
+                  col_offset):
+    """One quantized f32 logit tile (R, chunk) + its local column ids —
+    the single source of truth for the oracle scans' per-chunk math
+    (pad-column masking and post-quant suppression included)."""
+    wc = jax.lax.dynamic_slice_in_dim(w_pad, c * chunk, chunk, axis=1)
+    z = head_logits(h, wc, logit_scale=logit_scale)
+    z = mx.mx_fake_quant(z, fmt).astype(jnp.float32)
+    col = c * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+    z = jnp.where(col < V, z, NEG_INF)
+    if suppress_id is not None:
+        z = jnp.where(col + col_offset == suppress_id, NEG_INF, z)
+    return z, col
+
+
+def _online_ms(m, s, z):
+    """Online-softmax rescale: fold one logit tile into (max, exp-sum)."""
+    local_m = jnp.max(z, axis=-1)
+    m_new = jnp.maximum(m, local_m)
+    s_new = s * jnp.exp(m - m_new) + \
+        jnp.sum(jnp.exp(z - m_new[:, None]), axis=-1)
+    return m_new, s_new, local_m
+
+
+def fused_head_local_partials(hidden: jax.Array, w_shard: jax.Array,
+                              fmt: str = "none", *, logit_scale: float = 1.0,
+                              col_offset=0, suppress_id: Optional[int] = None,
+                              chunk_v: int = 4096, quant=None):
+    """Streamed-head Stable-Max partials over one vocab shard.
+
+    hidden (R, d), w_shard (d, V_loc) -> (m (R,), gidx (R,), s (R,)) with s
+    relative to m and gidx global (``col_offset`` = shard * V_loc).  The
+    logit chunks live only inside the scan carry — never (R, V_loc) at once.
+    """
+    R = hidden.shape[0]
+    hidden, w_shard, V, chunk, n_chunks = _prep_stream(hidden, w_shard,
+                                                       chunk_v, quant)
+    col_offset = jnp.asarray(col_offset, jnp.int32)
+
+    def body(carry, c):
+        m, idx, s = carry
+        z, col = _stream_chunk(hidden, w_shard, c, chunk, V, fmt,
+                               logit_scale, suppress_id, col_offset)
+        m_new, s_new, local_m = _online_ms(m, s, z)
+        big = jnp.int32(2 ** 30)
+        local_i = jnp.min(jnp.where(z >= local_m[:, None], col, big), axis=-1)
+        idx = jnp.where(local_m > m, local_i, idx)     # first chunk wins ties
+        return (m_new, idx, s_new), None
+
+    init = (jnp.full((R,), NEG_INF), jnp.zeros((R,), jnp.int32),
+            jnp.zeros((R,), jnp.float32))
+    (m, idx, s), _ = jax.lax.scan(body, init,
+                                  jnp.arange(n_chunks, dtype=jnp.int32))
+    return m, idx + col_offset, s
+
+
+def fused_head_stable_max(hidden: jax.Array, w_head: jax.Array,
+                          fmt: str = "none", *, logit_scale: float = 1.0,
+                          rng: Optional[jax.Array] = None,
+                          temperature: float = 0.0,
+                          suppress_id: Optional[int] = None,
+                          chunk_v: int = 4096, quant=None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Fused hidden (..., d) @ w_head (d, V) -> (conf (...), token (...)).
+
+    Pure-jnp oracle for kernels/fused_head_sampling.py: lax.scan streams the
+    head GEMM one (R, chunk_v) logit tile at a time into the online
+    (m, argmax, exp-sum) reduction, so HBM traffic is O(R*d + d*V) instead
+    of O(R*V).  Numerically this computes exactly what
+    ``stable_max(head_logits(...), fmt, ...)`` computes for greedy decoding
+    (identical per-element logits -> identical argmax tokens; the exp-sum
+    differs only in accumulation order).  With temperature > 0 the Gumbel
+    draw comes from the counter-based stream (``counter_gumbel``) rather
+    than jax.random.gumbel, so tiles can regenerate their own noise.
+    """
+    *lead, d = hidden.shape
+    h = hidden.reshape(-1, d)
+    if not (temperature > 0.0 and rng is not None):
+        # greedy: exactly the single-shard streamed partials, conf = 1/S
+        m, idx, s = fused_head_local_partials(
+            h, w_head, fmt, logit_scale=logit_scale,
+            suppress_id=suppress_id, chunk_v=chunk_v, quant=quant)
+        return (1.0 / s).reshape(lead), idx.reshape(lead)
+
+    R = h.shape[0]
+    h, w_head, V, chunk, n_chunks = _prep_stream(h, w_head, chunk_v, quant)
+    seed = gumbel_seed(rng)
+    rows = jnp.arange(R, dtype=jnp.int32)[:, None]
+    zero = jnp.int32(0)
+
+    def body(carry, c):
+        m, s, idx, best, z_at = carry
+        z, col = _stream_chunk(h, w_head, c, chunk, V, fmt, logit_scale,
+                               suppress_id, zero)
+        m_new, s_new, _ = _online_ms(m, s, z)
+        big = jnp.int32(2 ** 30)
+        g = counter_gumbel(seed, jnp.broadcast_to(rows, z.shape), col)
+        sc = z / temperature + g                       # Gumbel-max trick
+        local_b = jnp.max(sc, axis=-1)
+        li = jnp.min(jnp.where(sc >= local_b[:, None], col, big), axis=-1)
+        z_li = jnp.take_along_axis(
+            z, (li - c * chunk)[:, None], axis=-1)[:, 0]
+        upd = local_b > best
+        best = jnp.where(upd, local_b, best)
+        idx = jnp.where(upd, li, idx)
+        z_at = jnp.where(upd, z_li, z_at)
+        return (m_new, s_new, idx, best, z_at), None
+
+    init = (jnp.full((R,), NEG_INF), jnp.zeros((R,), jnp.float32),
+            jnp.zeros((R,), jnp.int32), jnp.full((R,), NEG_INF),
+            jnp.full((R,), NEG_INF))
+    (m, s, idx, _, z_at), _ = jax.lax.scan(
+        body, init, jnp.arange(n_chunks, dtype=jnp.int32))
+    conf = jnp.exp(z_at - m) / s
+    return conf.reshape(lead), idx.reshape(lead)
+
+
+def sharded_fused_head_stable_max(hidden: jax.Array, w_shard: jax.Array,
+                                  axis_name: str, fmt: str = "none", *,
+                                  logit_scale: float = 1.0,
+                                  suppress_id: Optional[int] = None,
+                                  chunk_v: int = 4096, quant=None
+                                  ) -> Tuple[jax.Array, jax.Array]:
+    """Fused head + Stable-Max with the LM head sharded on ``axis_name``
+    (runs inside shard_map): each chip streams its own (d, V/n) shard
+    through ``fused_head_local_partials`` and the per-chip (m, idx, s)
+    triples merge with the same tiny collective ``sharded_stable_max``
+    uses — per-chip vocab traffic drops to O(R*d + d*V/n)."""
+    shard = jax.lax.axis_index(axis_name)
+    vloc = w_shard.shape[-1]
+    m, gidx, s = fused_head_local_partials(
+        hidden.reshape(-1, hidden.shape[-1]), w_shard, fmt,
+        logit_scale=logit_scale, col_offset=shard * vloc,
+        suppress_id=suppress_id, chunk_v=chunk_v, quant=quant)
+    conf, idx = combine_partials(m, gidx, s, axis_name)
+    lead = hidden.shape[:-1]
+    return conf.reshape(lead), idx.reshape(lead)
 
 
 # ---------------------------------------------------------------------------
@@ -128,15 +352,29 @@ NEG_INF = jnp.float32(-1e30)
 
 
 def topk_transfer_mask(conf: jax.Array, mask_idx: jax.Array,
-                       k: jax.Array) -> jax.Array:
+                       k: jax.Array, use_kernel: Optional[bool] = None
+                       ) -> jax.Array:
     """conf (B, L) float; mask_idx (B, L) bool (True = still masked);
     k (B,) int32 -> transfer mask (B, L) bool with exactly min(k, #masked)
-    True entries per row, at the highest-confidence masked positions."""
+    True entries per row, at the highest-confidence masked positions.
+
+    One ``jax.lax.top_k`` (stable: ties break toward the lower index,
+    matching the old argsort-of-argsort rank) + one scatter, instead of two
+    full L*log(L) sorts per tick; on TPU the Pallas V_TOPK_MASK kernel
+    (kernels/topk_mask.py) computes the rank entirely in VMEM."""
+    B, L = conf.shape
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels import ops                  # lazy: avoid cycle
+        return ops.transfer_mask(conf.astype(jnp.float32), mask_idx, k)
     c = jnp.where(mask_idx, conf.astype(jnp.float32), NEG_INF)
-    order = jnp.argsort(-c, axis=-1)                 # descending
-    rank = jnp.argsort(order, axis=-1)               # rank of each position
+    _, order = jax.lax.top_k(c, L)                     # descending, stable
     take = jnp.minimum(k[:, None], jnp.sum(mask_idx, axis=-1, keepdims=True))
-    return (rank < take) & mask_idx
+    sel = jax.lax.broadcasted_iota(jnp.int32, (B, L), 1) < take
+    transfer = jnp.zeros((B, L), bool).at[
+        jnp.arange(B, dtype=jnp.int32)[:, None], order].set(sel)
+    return transfer & mask_idx
 
 
 def commit_tokens(x: jax.Array, x0: jax.Array, transfer: jax.Array
@@ -161,6 +399,13 @@ def sampling_step_full(logits: jax.Array, x: jax.Array, mask_id: int,
     sup = mask_id if cfg.suppress_mask_token else None
     conf, x0 = stable_max(logits, cfg.fmt, rng, cfg.temperature,
                           suppress_id=sup)
+    return _select_and_commit(conf, x0, x, m_idx, k, cfg, rng)
+
+
+def _select_and_commit(conf, x0, x, m_idx, k, cfg: SamplingConfig, rng
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared tail of the (fused and unfused) sampling steps: transfer
+    selection, top-k mask, masked commit."""
     select = conf
     if cfg.strategy == "random":
         if rng is None:
@@ -171,6 +416,47 @@ def sampling_step_full(logits: jax.Array, x: jax.Array, mask_id: int,
     x0 = jnp.where(m_idx, x0, x)                 # keep committed tokens
     transfer = topk_transfer_mask(select, m_idx, k)
     return commit_tokens(x, x0, transfer), transfer, conf
+
+
+def fused_sampling_step_full(hidden: jax.Array, w_head: jax.Array,
+                             x: jax.Array, mask_id: int, k: jax.Array,
+                             cfg: SamplingConfig,
+                             rng: Optional[jax.Array] = None, *,
+                             logit_scale: float = 1.0, quant=None,
+                             chunk_v: int = 4096,
+                             use_kernel: Optional[bool] = None
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``sampling_step_full`` fed by active-block *hidden states* instead of
+    logits: hidden (B, L, d) + w_head (d, V) stream through the fused
+    head + Stable-Max reduction (Pallas kernel on TPU, lax.scan oracle
+    elsewhere) so the (B, L, V) logits never exist in HBM.  Greedy tokens
+    are bit-identical to the unfused path (pinned by
+    tests/test_fused_head.py); temperature > 0 draws from the counter-based
+    Gumbel stream instead of jax.random.gumbel."""
+    m_idx = x == mask_id
+    sup = mask_id if cfg.suppress_mask_token else None
+    # no rng => greedy, matching stable_max's gating — the kernel must not
+    # fall back to a constant seed-0 Gumbel stream
+    temp = cfg.temperature if rng is not None else 0.0
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels import fused_head_sampling as _fh
+        if cfg.fmt not in _fh.SUPPORTED_FMTS:
+            use_kernel = False   # oracle handles every mx.FORMATS entry
+    if use_kernel:
+        from repro.kernels import ops                  # lazy: avoid cycle
+        seed = gumbel_seed(rng) if temp > 0.0 else jnp.uint32(0)
+        conf, x0 = ops.fused_head_sampling(
+            hidden, w_head, fmt=cfg.fmt, logit_scale=logit_scale,
+            suppress_id=sup, temperature=temp, seed=seed,
+            chunk_v=chunk_v, quant=quant)
+    else:
+        conf, x0 = fused_head_stable_max(
+            hidden, w_head, cfg.fmt, logit_scale=logit_scale, rng=rng,
+            temperature=temp, suppress_id=sup, chunk_v=chunk_v,
+            quant=quant)
+    return _select_and_commit(conf, x0, x, m_idx, k, cfg, rng)
 
 
 def sampling_step(logits: jax.Array, x: jax.Array, mask_id: int,

@@ -15,12 +15,49 @@ import jax.numpy as jnp
 
 from repro.kernels import baos_mx_quant as _bq
 from repro.kernels import flash_bidir as _fb
+from repro.kernels import fused_head_sampling as _fh
 from repro.kernels import stablemax_sampling as _ss
 from repro.kernels import topk_mask as _tk
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def fused_head_sampling(hidden: jax.Array, w_head: jax.Array, *,
+                        fmt: str = "none", logit_scale: float = 1.0,
+                        suppress_id: Optional[int] = None,
+                        temperature: float = 0.0,
+                        seed: Optional[jax.Array] = None,
+                        tile_r: int = 8, chunk_v: int = 512, quant=None,
+                        interpret: Optional[bool] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """hidden (..., d) @ w_head (d, V) -> (conf (...), token (...)) without
+    materializing the (..., V) logits.  Flattens leading dims; the optional
+    MX ``quant`` boundary policy is applied outside the kernel (fake-quant
+    emulation) so the kernel itself stays a pure streamed head."""
+    interp = _default_interpret() if interpret is None else interpret
+    batch_shape = hidden.shape[:-1]
+    d = hidden.shape[-1]
+    flat = hidden.reshape(-1, d)
+    if quant is not None and quant.enabled:
+        flat, w_head = quant.acts(flat), quant.weights(w_head)
+    if seed is None:
+        if temperature > 0.0:
+            raise ValueError(
+                "temperature > 0 requires a seed: without one every call "
+                "would draw the identical counter-Gumbel noise stream")
+        seed = jnp.uint32(0)
+    # cap the (d, CHUNK_V) weight slab at ~4 MB so the double-buffered
+    # block fits the ~16 MB/core VMEM budget at production d (the oracle's
+    # lax.scan has no such limit, so callers may pass much larger chunks)
+    cap = max(128, (4 * 1024 * 1024) // (d * flat.dtype.itemsize))
+    chunk_v = min(chunk_v, cap)
+    conf, idx = _fh.fused_head_sampling(
+        flat, w_head, seed, tile_r=tile_r, chunk_v=chunk_v, fmt=fmt,
+        logit_scale=logit_scale, temperature=temperature,
+        suppress_id=suppress_id, interpret=interp)
+    return conf.reshape(batch_shape), idx.reshape(batch_shape)
 
 
 def fused_sampling(logits: jax.Array, suppress_id: Optional[int] = None,

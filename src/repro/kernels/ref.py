@@ -20,8 +20,11 @@ def stablemax_sampling_ref(logits: jax.Array,
 
 def topk_mask_ref(conf: jax.Array, mask: jax.Array, k: jax.Array
                   ) -> jax.Array:
+    # use_kernel=False: the oracle must stay the pure-jnp path even on TPU,
+    # where topk_transfer_mask would otherwise dispatch to the very kernel
+    # this reference validates.
     return sampling_lib.topk_transfer_mask(
-        conf, mask.astype(bool), k).astype(jnp.int32)
+        conf, mask.astype(bool), k, use_kernel=False).astype(jnp.int32)
 
 
 def baos_mx_quant_ref(x: jax.Array, center: jax.Array, scale: jax.Array,

@@ -9,6 +9,12 @@ Every model exposes:
     forward(params, tokens, *, cache, seg_start, baos_cfg, calibrate,
             calib_mask, quant, kv_valid, logits_slice, ...) ->
         (logits, new_cache, aux_loss)
+
+Models that can stop before the LM head set ``supports_head_mode = True``:
+their forward accepts ``head_mode='hidden'`` (returning final-norm hidden
+states) and their params expose the head weights at ``params['lm_head']``
+(shape (d_model, vocab)) — the contract the fused head + Stable-Max
+sampling path (core/diffusion, core/sampling) relies on.
 """
 from __future__ import annotations
 
@@ -18,6 +24,8 @@ from repro.models.transformer import ModelConfig
 
 class TransformerModel:
     """Dense / MoE dLLM (also the VLM/audio text-decoder base)."""
+
+    supports_head_mode = True        # forward(head_mode="hidden") works
 
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg

@@ -439,7 +439,8 @@ def forward(params, cfg: ModelConfig, tokens: Optional[jax.Array] = None, *,
             calib_mask: Optional[jax.Array] = None,
             quant: Optional[QuantPolicy] = None,
             cross_kv=None, attn_mode: Optional[str] = None,
-            logits_slice: Optional[Tuple[int, int]] = None):
+            logits_slice: Optional[Tuple[int, int]] = None,
+            head_mode: str = "logits"):
     calib_start = None
     if calibrate and logits_slice is not None:
         calib_start = jnp.asarray(logits_slice[0], jnp.int32)
@@ -447,7 +448,11 @@ def forward(params, cfg: ModelConfig, tokens: Optional[jax.Array] = None, *,
 
     tokens (B, S_seg) or precomputed ``embeds``; with ``prefix_embeds``
     (VLM/audio stub frontends) they are prepended to the token embeddings.
-    Returns (logits, new_cache, aux_loss).
+    Returns (logits, new_cache, aux_loss).  ``head_mode='hidden'`` stops
+    before the LM head and returns the final-norm hidden states (B, S, d)
+    instead of logits — the feed for the fused head + Stable-Max sampling
+    path (core/sampling.fused_head_stable_max), which streams the (d, V)
+    projection so (B, S, V) logits never reach HBM.
     """
     baos_cfg = baos_cfg or baos_lib.BAOSConfig(enabled=False)
     if embeds is None:
@@ -515,6 +520,8 @@ def forward(params, cfg: ModelConfig, tokens: Optional[jax.Array] = None, *,
         if logits_slice is not None:
             start, length = logits_slice
             x = jax.lax.dynamic_slice_in_dim(x, start, length, axis=1)
+        if head_mode == "hidden":
+            return sharding.shard(x, "batch", "seq", "embed"), new_cache, aux
         logits = layers.qdot(x, params["lm_head"], quant) * cfg.logit_scale
         logits = sharding.shard(logits, "batch", "seq", "vocab")
         return logits, new_cache, aux
@@ -549,8 +556,10 @@ def forward(params, cfg: ModelConfig, tokens: Optional[jax.Array] = None, *,
     if logits_slice is not None:
         start, length = logits_slice
         x = jax.lax.dynamic_slice_in_dim(x, start, length, axis=1)
-    logits = layers.qdot(x, params["lm_head"], quant) * cfg.logit_scale
-    logits = sharding.shard(logits, "batch", "seq", "vocab")
     if cache is None:
         new_cache = None
+    if head_mode == "hidden":
+        return sharding.shard(x, "batch", "seq", "embed"), new_cache, aux
+    logits = layers.qdot(x, params["lm_head"], quant) * cfg.logit_scale
+    logits = sharding.shard(logits, "batch", "seq", "vocab")
     return logits, new_cache, aux

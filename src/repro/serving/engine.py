@@ -8,6 +8,12 @@ preallocated KV slot pool; a slot frees (and a queued request admits) the
 moment its request's last block unmasks, so the batch stays full under
 mixed prompt/generation lengths instead of serializing per request.
 
+For head-mode-capable models the tick slices each row's active block at the
+*hidden* level (B, block, d) and feeds the fused LM-head + Stable-Max path
+(dcfg.head_path, docs/fused_sampling.md): vocab-wide logits never reach
+HBM — the pre-PR behavior of materializing (B, S, V) logits every tick is
+kept only as the explicit ``head_path='legacy'`` escape hatch.
+
 Tick modes:
   * ``none``: cache-free full recompute per tick (Block Diffusion).  A
     one-slot engine in this mode runs the exact jitted computation
@@ -98,6 +104,9 @@ class ServingEngine:
         self.policy = policy or FIFOPolicy()
         self.breakdown = breakdown
         self.fwd_kw = dict(fwd_kw or {})
+        # QuantPolicy is not a jax type: bind it statically into the jitted
+        # tick fns rather than passing it as a runtime kwarg
+        self._quant = self.fwd_kw.pop("quant", None)
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
 
         self.pool = CachePool(model, num_slots, max_seq_len,
@@ -121,11 +130,11 @@ class ServingEngine:
 
         if breakdown:
             self._fwd_fn, self._smp_fn = diffusion.get_tick_stage_fns(
-                model, dcfg, self.mask_id, jit_steps)
+                model, dcfg, self.mask_id, jit_steps, quant=self._quant)
             self._tick_fn = None
         else:
             self._tick_fn = diffusion.get_tick_fn(
-                model, dcfg, self.mask_id, jit_steps)
+                model, dcfg, self.mask_id, jit_steps, quant=self._quant)
 
     # -- request lifecycle --------------------------------------------------
 
@@ -220,14 +229,17 @@ class ServingEngine:
 
         t0 = time.perf_counter()
         if self.breakdown:
-            logits, new_cache = self._fwd_fn(
+            feats, new_cache = self._fwd_fn(
                 self.params, self.x, self.kv_valid, bs_vec, cache,
                 **self.fwd_kw)
-            jax.block_until_ready(logits)
+            jax.block_until_ready(feats)
             t1 = time.perf_counter()
             self.metrics.record_stage("forward", t1 - t0)
+            # feats = pre-head hidden states for head-capable models: the
+            # sampling stage owns the LM head (the paper's Fig. 1 split
+            # charges vocab traffic to sampling, not the model forward)
             x_new, conf_min, masks_left = self._smp_fn(
-                logits, self.x, bs_vec, k_vec, srng)
+                self.params, feats, self.x, bs_vec, k_vec, srng)
             jax.block_until_ready(x_new)
             self.metrics.record_stage("sampling", time.perf_counter() - t1)
         else:

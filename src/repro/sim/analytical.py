@@ -188,6 +188,52 @@ def reference_sampling_stage(B: int, L: int, V: int, hw: HWConfig, *,
     return c
 
 
+def fused_head_sampling_stage(B: int, L: int, V: int, d: int, hw: HWConfig,
+                              *, w_bytes: float = 0.5, act_bytes: float = 2.0
+                              ) -> Cost:
+    """Fused LM-head + Stable-Max stage (docs/fused_sampling.md).
+
+    The head GEMM streams (TILE_R x CHUNK_V) logit tiles through VMEM
+    straight into the online (m, argmax, exp-sum) reduction, so the only
+    HBM traffic is the (B*L, d) hidden read + the (d, V) weight stream —
+    O(B*L*d + d*V) instead of the unfused O(B*L*V) logits write/read (plus
+    the same weight stream).  Vector work is unchanged from the single-pass
+    engine; it just sources logits from VMEM — which is why, unlike
+    ``unfused_head_sampling_stage``, no sampling-precision ``fmt`` enters
+    the byte count."""
+    rows = B * L
+    n = float(rows) * V
+    g = gemm(rows, d, V, hw, w_bytes=w_bytes, act_bytes=act_bytes)
+    bytes_ = rows * d * act_bytes + d * V * w_bytes    # no M*N writeback
+    c = Cost(t_cmp=g.t_cmp, t_mem=bytes_ / hw.hbm_bw, macs=g.macs,
+             hbm_bytes=bytes_)
+    c += vector_pass(n, hw, "V_RED_MAX_IDX", 0.0, from_hbm=False)
+    c += vector_pass(n, hw, "V_EXP_V", 0.0, from_hbm=False)
+    c += vector_pass(n, hw, "V_RED_SUM", 0.0, from_hbm=False)
+    c += vector_pass(2.0 * rows, hw, "S_ST", 4.0, from_hbm=False)
+    c += vector_pass(rows, hw, "S_MAP_V_FP", 0.0, from_hbm=False)
+    c += vector_pass(rows, hw, "V_TOPK_MASK_PER_ELT", 0.0, from_hbm=False)
+    c += vector_pass(2.0 * rows, hw, "V_SELECT_INT", 0.0, from_hbm=False)
+    return c
+
+
+def unfused_head_sampling_stage(B: int, L: int, V: int, d: int,
+                                hw: HWConfig, *, fmt: str = "mxfp8_e4m3",
+                                w_bytes: float = 0.5, act_bytes: float = 2.0,
+                                logit_rows: Optional[int] = None,
+                                two_pass: bool = False) -> Cost:
+    """The unfused comparison point: head GEMM writes ``logit_rows`` x V
+    logits back to HBM (bf16), then the sampling engine streams the B*L
+    active rows back in at the sampling precision.  ``logit_rows`` defaults
+    to B*L (the block-sliced fallback); the pre-fusion serving tick
+    materialized the *full-sequence* B*S rows — pass that to model it."""
+    rows = logit_rows if logit_rows is not None else B * L
+    c = gemm(rows, d, V, hw, w_bytes=w_bytes, act_bytes=act_bytes)
+    c += sampling_stage(B, L, V, hw, fmt=fmt, v_chunk=4096,
+                        two_pass=two_pass)
+    return c
+
+
 def sampling_sram_footprint(B: int, L: int, V: int, v_chunk: int,
                             vlen: int) -> Dict[str, float]:
     """Paper Eq. 4-6 (bytes; vector/FP entries bf16 = 2B, int = 4B)."""
@@ -250,7 +296,8 @@ def transformer_pass(cfg: ModelConfig, B: int, seg: int, s_tot: int,
             c += gemm(M, cfg.d_ff, d, hw, w_bytes=w_bytes)
         c += vector_pass(2 * M * d, hw, "V_ADD_VV", 0.0, from_hbm=False)
     rows = logits_rows if logits_rows is not None else M
-    c += gemm(rows, d, cfg.vocab, hw, w_bytes=w_bytes)            # LM head
+    if rows:        # rows == 0: head fused into the sampling stage
+        c += gemm(rows, d, cfg.vocab, hw, w_bytes=w_bytes)        # LM head
     return c
 
 
@@ -293,9 +340,14 @@ def end_to_end(cfg: ModelConfig, hw: HWConfig, *, B: int, prompt: int,
                two_pass_sampling: bool = True,
                sampling_engine: str = "dart",
                v_chunk: Optional[int] = None) -> E2EResult:
-    """T_block = T_warm(L_tot) + (steps-1) * T_refine(L)  (paper §4.1)."""
+    """T_block = T_warm(L_tot) + (steps-1) * T_refine(L)  (paper §4.1).
+
+    ``sampling_engine='fused'`` models the fused LM-head + Stable-Max path:
+    the head GEMM leaves the model pass (logits_rows=0) and its streamed
+    cost is charged to the sampling stage instead."""
     n_blocks = gen_len // block_len
     s_tot = prompt + gen_len
+    lrows = 0 if sampling_engine == "fused" else B * block_len
     model = Cost()
     samp = Cost()
     for _ in range(n_blocks):
@@ -303,22 +355,26 @@ def end_to_end(cfg: ModelConfig, hw: HWConfig, *, B: int, prompt: int,
             for _ in range(steps):
                 model += transformer_pass(cfg, B, s_tot, s_tot, hw,
                                           w_bytes=w_bytes, kv_bytes=kv_bytes,
-                                          logits_rows=B * block_len)
+                                          logits_rows=lrows)
         else:
             model += transformer_pass(cfg, B, s_tot, s_tot, hw,
                                       w_bytes=w_bytes, kv_bytes=kv_bytes,
-                                      logits_rows=B * block_len)  # warm
+                                      logits_rows=lrows)           # warm
             seg = block_len if cache_mode == "dual" else \
                 (s_tot - prompt)  # prefix mode recomputes block+suffix
             for _ in range(steps - 1):
                 model += transformer_pass(
                     cfg, B, seg, s_tot, hw, kv_resident=(cache_mode == "dual"),
                     w_bytes=w_bytes, kv_bytes=kv_bytes,
-                    logits_rows=B * block_len)
+                    logits_rows=lrows)
         for _ in range(steps):
             if sampling_engine == "reference":
                 samp += reference_sampling_stage(B, block_len, cfg.vocab, hw,
                                                  fmt=sampling_fmt)
+            elif sampling_engine == "fused":
+                samp += fused_head_sampling_stage(
+                    B, block_len, cfg.vocab, cfg.d_model, hw,
+                    w_bytes=w_bytes)
             else:
                 samp += sampling_stage(B, block_len, cfg.vocab, hw,
                                        fmt=sampling_fmt, v_chunk=v_chunk,
