@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   serve_engine         continuous-batching engine vs legacy serving TPS
   fused_head           fused LM-head+Stable-Max vs unfused: wall-clock +
                        modeled HBM bytes (emits BENCH_fused_head.json)
+  sharded_tick         SPMD (data, model)-mesh serving tick: modeled
+                       per-chip HBM vs shard count + measured debug-mesh
+                       parity (emits BENCH_sharded_tick.json)
 """
 from __future__ import annotations
 
@@ -25,7 +28,7 @@ MODULES = [
     "fig1_breakdown", "fig7_sampling_sweeps", "table2_hbm",
     "table3_pipeline", "table4_crossval", "table5_quant",
     "table6_end2end", "fig9_dse", "roofline_report", "serve_engine",
-    "fused_head",
+    "fused_head", "sharded_tick",
 ]
 
 

@@ -1,0 +1,163 @@
+"""SPMD sharded serving tick: modeled per-chip HBM vs shard count +
+measured CPU wall-clock on a forced-host-device debug mesh.
+
+Modeled: ``sim.analytical.sharded_fused_head_sampling_stage`` per-chip
+sampling HBM bytes at full LLaDA-8B scale as the model axis grows — the
+dominant (d, V) head stream shrinks linearly in n_model while the
+(B*L, d) hidden read is the fixed floor.
+
+Measured: the serving engine runs the same greedy trace single-device and
+under shard_mapped (data, model) debug meshes (forced CPU host devices),
+checking bit-identical completed tokens and reporting wall-clock per tick.
+CPU collectives make the sharded path *slower* here — the measurement is a
+correctness + plumbing proof, the traffic win is the modeled half.
+
+Emits BENCH_sharded_tick.json.
+
+    PYTHONPATH=src python -m benchmarks.sharded_tick [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# must precede any jax import: the debug mesh needs >= 8 host devices
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import jax                                                      # noqa: E402
+import numpy as np                                              # noqa: E402
+
+from benchmarks.common import Row                               # noqa: E402
+
+SMOKE = "--smoke" in sys.argv
+SEED = 0
+MODEL_SHARDS = (1, 2, 4, 8, 16)
+MESHES = ((1, 1), (1, 4), (2, 2), (2, 4))       # (data, model) measured
+BLOCK_LEN = 8
+STEPS = 4
+NUM_SLOTS = 4
+N_REQUESTS = 4 if SMOKE else 8
+
+
+def _modeled(rows: list) -> dict:
+    from repro.configs import base
+    from repro.sim.analytical import (HWConfig,
+                                      sharded_fused_head_sampling_stage)
+    cfg = base.get_config("llada-8b")
+    hw = HWConfig()
+    B, L = 64, 64
+    V, d = cfg.vocab, cfg.d_model
+    points = []
+    for n in MODEL_SHARDS:
+        c = sharded_fused_head_sampling_stage(B, L, V, d, hw,
+                                              model_shards=n)
+        head_bytes = d * (-(-V // n)) * 0.5
+        points.append({"model_shards": n,
+                       "per_chip_bytes": c.hbm_bytes,
+                       "per_chip_head_bytes": head_bytes,
+                       "t_us": c.t * 1e6})
+        rows.append((f"sharded_tick/model/per_chip_bytes_n{n}", 0.0,
+                     f"{c.hbm_bytes/1e6:.1f}MB"))
+    base_b = points[0]["per_chip_bytes"]
+    for p in points:
+        p["ratio_vs_1"] = base_b / p["per_chip_bytes"]
+        p["head_ratio_vs_1"] = (points[0]["per_chip_head_bytes"]
+                                / p["per_chip_head_bytes"])
+    rows.append(("sharded_tick/model/ratio_n4", 0.0,
+                 f"{points[2]['ratio_vs_1']:.2f}x"))
+    return {"B": B, "L": L, "vocab": V, "d": d, "points": points}
+
+
+def _measured(rows: list) -> dict:
+    from repro.configs import base
+    from repro.core import diffusion, sampling as sampling_lib
+    from repro.core.baos import BAOSConfig
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models.registry import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = base.get_config("llada-8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+    dcfg = diffusion.DiffusionConfig(
+        gen_length=2 * BLOCK_LEN, block_length=BLOCK_LEN,
+        steps_per_block=STEPS, cache_mode="none",
+        sampling=sampling_lib.SamplingConfig(),
+        baos=BAOSConfig(enabled=False))
+    rs = np.random.RandomState(SEED)
+    reqs = [Request(uid=i,
+                    prompt=rs.randint(0, cfg.vocab - 2,
+                                      size=(12,)).astype(np.int32),
+                    gen_length=2 * BLOCK_LEN) for i in range(N_REQUESTS)]
+    max_seq = 12 + 2 * BLOCK_LEN
+
+    def run(mesh):
+        eng = ServingEngine(model, params, dcfg, num_slots=NUM_SLOTS,
+                            max_seq_len=max_seq, mode="none",
+                            rng=jax.random.PRNGKey(SEED), mesh=mesh)
+        eng.warmup()
+        done = eng.run([Request(uid=r.uid, prompt=r.prompt,
+                                gen_length=r.gen_length) for r in reqs])
+        toks = {c.uid: c.tokens for c in done}
+        s = eng.metrics.summary()
+        return toks, eng.now / max(s["ticks"], 1), s["ticks"]
+
+    ref_toks, ref_us, _ = run(None)
+    n_dev = jax.device_count()
+    meshes = []
+    skipped = []
+    parity_all = True
+    for data, model_ax in MESHES:
+        if data * model_ax > n_dev or NUM_SLOTS % data:
+            # e.g. under benchmarks.run jax initialized before this module
+            # could force host devices — record the degradation loudly
+            # rather than reporting parity over meshes that never ran
+            skipped.append([data, model_ax])
+            print(f"sharded_tick: SKIPPED mesh ({data},{model_ax}) — only "
+                  f"{n_dev} device(s); run standalone with XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count=8",
+                  file=sys.stderr)
+            continue
+        toks, per_tick, ticks = run(make_debug_mesh(data, model_ax))
+        parity = (set(toks) == set(ref_toks) and
+                  all(np.array_equal(toks[u], ref_toks[u]) for u in toks))
+        parity_all &= parity
+        meshes.append({"data": data, "model": model_ax,
+                       "per_tick_s": per_tick, "ticks": ticks,
+                       "greedy_token_parity": parity})
+        rows.append((f"sharded_tick/measured/d{data}m{model_ax}",
+                     per_tick * 1e6, f"parity={parity}"))
+    sharded_ran = any(m["data"] * m["model"] > 1 for m in meshes)
+    rows.append(("sharded_tick/measured/parity_all", 0.0,
+                 f"{parity_all} (sharded_meshes_ran={sharded_ran}, "
+                 f"skipped={len(skipped)})"))
+    return {"devices": n_dev, "single_device_per_tick_s": ref_us,
+            "meshes": meshes, "skipped_meshes": skipped,
+            "sharded_meshes_ran": sharded_ran,
+            "greedy_token_parity": parity_all}
+
+
+def run() -> list:
+    rows: list[Row] = []
+    modeled = _modeled(rows)
+    measured = _measured(rows)
+    payload = {"benchmark": "sharded_tick", "smoke": SMOKE,
+               "modeled_llada8b_tick": modeled, "measured": measured}
+    with open("BENCH_sharded_tick.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    rows.append(("sharded_tick/json", 0.0, "BENCH_sharded_tick.json"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")
+    out = json.load(open("BENCH_sharded_tick.json"))
+    assert out["measured"]["greedy_token_parity"], "sharded tokens diverged"
+    assert out["measured"]["sharded_meshes_ran"], \
+        "no multi-device mesh ran — parity above is vacuous"

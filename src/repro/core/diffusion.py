@@ -50,7 +50,10 @@ class DiffusionConfig:
 
     @property
     def num_blocks(self) -> int:
-        assert self.gen_length % self.block_length == 0
+        if self.gen_length % self.block_length:
+            raise ValueError(
+                f"gen_length {self.gen_length} must be a multiple of "
+                f"block_length {self.block_length}")
         return self.gen_length // self.block_length
 
 
@@ -175,16 +178,27 @@ def init_state(model, prompt: jax.Array, dcfg: DiffusionConfig,
 
 def _active_sampling_step(feats, xa, k, step_rng, params, mode: str,
                           dcfg: DiffusionConfig, mask_id: int, model,
-                          quant=None):
+                          quant=None, axis_name: Optional[str] = None):
     """Route one active block through the selected head path.
 
     feats is (B, L, V) block logits (mode='logits') or (B, L, d) pre-head
     hidden states (mode 'fused'/'unfused').  Returns the full
-    (new tokens, transfer, conf) triple of ``sampling_step_full``."""
+    (new tokens, transfer, conf) triple of ``sampling_step_full``.
+
+    With ``axis_name`` (inside shard_map) ``params['lm_head']`` is this
+    chip's (d, V/n) column shard: the streamed partials merge over the
+    mesh axis and ``col_limit`` masks the head's zero-pad columns."""
     if mode == "logits":
         return sampling_lib.sampling_step_full(
             feats, xa, mask_id, k, dcfg.sampling, step_rng)
     scale = float(model.cfg.logit_scale)
+    if axis_name is not None:
+        if mode != "fused":
+            raise ValueError("the SPMD tick requires head_path='fused'")
+        return sampling_lib.sharded_fused_sampling_step_full(
+            feats, params["lm_head"], xa, mask_id, k, dcfg.sampling,
+            step_rng, axis_name=axis_name, logit_scale=scale, quant=quant,
+            chunk_v=dcfg.head_chunk, col_limit=int(model.cfg.vocab))
     if mode == "fused":
         return sampling_lib.fused_sampling_step_full(
             feats, params["lm_head"], xa, mask_id, k, dcfg.sampling,
@@ -236,12 +250,13 @@ def _cached_step_fn(model, dcfg: DiffusionConfig, kind: str, suffix_len: int,
 
 
 def step(model, params, state: DiffusionState, jit_steps: bool = True,
-         **fwd_kw) -> DiffusionState:
+         mesh=None, **fwd_kw) -> DiffusionState:
     """Advance one denoising step (one forward + one sampling commit).
 
     Mirrors the inner loop of paper Alg. 2 exactly: warm step at
     step_in_block==0, refinement (per cache mode) afterwards, Stable-Max
-    commit of ks[:, t] tokens, one rng split per step.
+    commit of ks[:, t] tokens, one rng split per step.  With ``mesh``
+    (cache_mode='none' only) the step runs the shard_mapped SPMD tick.
     """
     if state.done:
         raise ValueError("step() called on a finished DiffusionState")
@@ -256,10 +271,22 @@ def step(model, params, state: DiffusionState, jit_steps: bool = True,
     # cached jitted fns instead of letting it ride **fwd_kw into jit
     fwd_kw = dict(fwd_kw)
     quant = fwd_kw.pop("quant", None)
+    if mesh is not None and dcfg.cache_mode != "none":
+        raise ValueError(
+            "step(mesh=...) supports cache_mode='none' only (the SPMD "
+            "path runs the batched tick; use the serving engine for "
+            "pooled warm-cache SPMD ticks)")
+    if mesh is not None and fwd_kw:
+        raise ValueError("step(mesh=...) does not support extra forward "
+                         "kwargs")
 
     if dcfg.cache_mode == "none":
-        tick = get_tick_fn(model, dcfg, state.mask_id, jit_steps=jit_steps,
-                           quant=quant)
+        if mesh is not None:
+            tick = get_spmd_tick_fn(model, dcfg, state.mask_id, mesh,
+                                    jit_steps=jit_steps, quant=quant)
+        else:
+            tick = get_tick_fn(model, dcfg, state.mask_id,
+                               jit_steps=jit_steps, quant=quant)
         x, _, _, _ = tick(params, state.x,
                           jnp.ones((B, s_tot), bool),
                           jnp.full((B,), bs, jnp.int32),
@@ -294,15 +321,25 @@ def step(model, params, state: DiffusionState, jit_steps: bool = True,
 
 def generate(model, params, prompt: jax.Array, dcfg: DiffusionConfig,
              rng: Optional[jax.Array] = None, mask_id: Optional[int] = None,
-             jit_steps: bool = True, **fwd_kw) -> jax.Array:
+             jit_steps: bool = True, mesh=None, **fwd_kw) -> jax.Array:
     """Blocked diffusion generation (paper Alg. 2 outer loops).
 
     prompt: (B, P) int32.  Returns (B, P + gen_length) tokens.  Thin loop
-    over the resumable state machine (init_state / step).
+    over the resumable state machine (init_state / step).  With ``mesh``
+    (a (data, model) mesh; cache_mode='none' only) every step runs the
+    shard_mapped SPMD tick: batch rows shard over 'data', the LM head
+    columns over 'model' (docs/sharded_serving.md).
     """
+    if mesh is not None and dcfg.cache_mode != "none":
+        raise ValueError(
+            "generate(mesh=...) requires cache_mode='none' (the SPMD path "
+            "runs the batched tick)")
+    if mesh is not None:
+        params = place_spmd_params(params, mesh)   # once, not per step
     state = init_state(model, prompt, dcfg, rng=rng, mask_id=mask_id)
     while not state.done:
-        state = step(model, params, state, jit_steps=jit_steps, **fwd_kw)
+        state = step(model, params, state, jit_steps=jit_steps, mesh=mesh,
+                     **fwd_kw)
     return state.x
 
 
@@ -349,7 +386,8 @@ def tick_forward(model, params, x: jax.Array, kv_valid: jax.Array,
 
 def tick_sample(params, feats: jax.Array, x: jax.Array,
                 block_start: jax.Array, k: jax.Array, srng: jax.Array,
-                dcfg: DiffusionConfig, mask_id: int, model=None, quant=None):
+                dcfg: DiffusionConfig, mask_id: int, model=None, quant=None,
+                axis_name: Optional[str] = None):
     """Sampling half of a serving tick: per-row active-block slice at the
     *hidden* level (B, L, d) for head-capable models, then the selected
     head path (fused streamed head / unfused block logits / legacy), the
@@ -369,7 +407,8 @@ def tick_sample(params, feats: jax.Array, x: jax.Array,
     fa = jax.vmap(row_slice)(feats, block_start)   # (B, L, d) or (B, L, V)
     xa = jax.vmap(row_slice)(x, block_start)
     xa_new, transfer, conf = _active_sampling_step(
-        fa, xa, k, srng, params, mode, dcfg, mask_id, model, quant=quant)
+        fa, xa, k, srng, params, mode, dcfg, mask_id, model, quant=quant,
+        axis_name=axis_name)
     x_new = jax.vmap(
         lambda row, upd, s: jax.lax.dynamic_update_slice_in_dim(
             row, upd, s, axis=0))(x, xa_new, block_start)
@@ -402,6 +441,97 @@ def get_tick_fn(model, dcfg: DiffusionConfig, mask_id: int,
     fn = functools.partial(batched_tick, model, dcfg=dcfg, mask_id=mask_id,
                            quant=quant)
     return jax.jit(fn) if jit_steps else fn
+
+
+def place_spmd_params(params, mesh):
+    """One-time SPMD placement of a param pytree for the sharded tick:
+    the LM head is zero-padded to MX-aligned shard boundaries
+    (``sampling.pad_head_for_mesh``) and column-sharded over 'model';
+    everything else replicates.  With params placed this way the jitted
+    tick's internal pad + sharding constraint are no-ops, so ticks never
+    move parameters — without it every tick re-broadcasts the full pytree
+    across the mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    if "model" not in mesh.axis_names:
+        raise ValueError(f"SPMD params need a mesh with a 'model' axis; "
+                         f"got {mesh.axis_names}")
+    w = sampling_lib.pad_head_for_mesh(params["lm_head"],
+                                       mesh.shape["model"])
+    rep = NamedSharding(mesh, P())
+    head = NamedSharding(mesh, P(None, "model"))
+    return {k: jax.device_put(w if k == "lm_head" else v,
+                              head if k == "lm_head" else rep)
+            for k, v in params.items()}
+
+
+@functools.lru_cache(maxsize=16)
+def get_spmd_tick_fn(model, dcfg: DiffusionConfig, mask_id: int, mesh,
+                     jit_steps: bool = True, quant=None):
+    """``batched_tick`` shard_mapped over a ``(data, model)`` mesh.
+
+    The data axis shards engine batch slots (each chip's forward sees only
+    its (B/n_data, S) canvas rows); the model axis shards the LM-head
+    columns, so each chip streams only its (d, V/n_model) shard through
+    ``fused_head_local_partials`` and the per-chip (m, idx, s) partials
+    merge with the one-pmax/psum/pmin ``combine_partials`` collective —
+    per-chip sampling traffic drops from O(R*d + d*V) to O(R*d + d*V/n)
+    (sim/analytical.sharded_fused_head_sampling_stage models exactly this).
+
+    Greedy tokens are bit-identical to the single-device fused tick: the
+    head is zero-padded to MX-block-aligned shard boundaries
+    (``sampling.pad_head_for_mesh``), so per-shard fake-quant blocks match
+    full-row blocks and the combine's lowest-index tie-break matches the
+    fused scan's first-chunk-wins rule (pinned by tests/test_spmd.py).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    for ax in ("data", "model"):
+        if ax not in mesh.axis_names:
+            raise ValueError(
+                f"SPMD tick needs mesh axes ('data', 'model'); "
+                f"got {mesh.axis_names}")
+    if head_feed_mode(model, dcfg) != "fused":
+        raise ValueError(
+            "the SPMD tick requires head_path='fused' and a "
+            "head-mode-capable model (supports_head_mode)")
+    if dcfg.sampling.temperature > 0.0 or dcfg.sampling.strategy == "random":
+        raise NotImplementedError(
+            "SPMD tick supports greedy Stable-Max decoding only "
+            "(temperature == 0, strategy='stablemax'): the tick rng is "
+            "replicated across the mesh, so per-shard noise draws would "
+            "silently correlate data shards")
+    n_model = mesh.shape["model"]
+    n_data = mesh.shape["data"]
+
+    def body(params, x, kv_valid, block_start, k, srng, cache):
+        feats, new_cache = tick_forward(model, params, x, kv_valid,
+                                        block_start, cache, dcfg, quant=quant)
+        x_new, conf_min, masks_left = tick_sample(
+            params, feats, x, block_start, k, srng, dcfg, mask_id,
+            model=model, quant=quant, axis_name="model")
+        return x_new, new_cache, conf_min, masks_left
+
+    def tick(params, x, kv_valid, block_start, k, srng, cache=None):
+        if x.shape[0] % n_data:
+            raise ValueError(
+                f"batch {x.shape[0]} is not divisible by the data axis "
+                f"size {n_data}")
+        params = dict(params)
+        params["lm_head"] = sampling_lib.pad_head_for_mesh(
+            params["lm_head"], n_model)
+        pspec = jax.tree.map(lambda _: P(), params)
+        pspec["lm_head"] = P(None, "model")
+        cspec = jax.tree.map(lambda _: P(None, "data"), cache)
+        row = P("data")
+        f = shard_map(
+            body, mesh=mesh,
+            in_specs=(pspec, P("data", None), P("data", None), row, row,
+                      P(), cspec),
+            out_specs=(P("data", None), cspec, row, row))
+        return f(params, x, kv_valid, block_start, k, srng, cache)
+
+    return jax.jit(tick) if jit_steps else tick
 
 
 @functools.lru_cache(maxsize=32)

@@ -206,15 +206,20 @@ def _prep_stream(hidden: jax.Array, w: jax.Array, chunk_v: int, quant):
 
 
 def _stream_chunk(h, w_pad, c, chunk, V, fmt, logit_scale, suppress_id,
-                  col_offset):
+                  col_offset, col_limit=None):
     """One quantized f32 logit tile (R, chunk) + its local column ids —
     the single source of truth for the oracle scans' per-chunk math
-    (pad-column masking and post-quant suppression included)."""
+    (pad-column masking and post-quant suppression included).
+    ``col_limit`` masks *global* columns >= the true vocab size: under the
+    SPMD mesh the head is zero-padded before sharding, so a shard's local
+    width V may extend past the real vocabulary."""
     wc = jax.lax.dynamic_slice_in_dim(w_pad, c * chunk, chunk, axis=1)
     z = head_logits(h, wc, logit_scale=logit_scale)
     z = mx.mx_fake_quant(z, fmt).astype(jnp.float32)
     col = c * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
     z = jnp.where(col < V, z, NEG_INF)
+    if col_limit is not None:
+        z = jnp.where(col + col_offset < col_limit, z, NEG_INF)
     if suppress_id is not None:
         z = jnp.where(col + col_offset == suppress_id, NEG_INF, z)
     return z, col
@@ -232,7 +237,8 @@ def _online_ms(m, s, z):
 def fused_head_local_partials(hidden: jax.Array, w_shard: jax.Array,
                               fmt: str = "none", *, logit_scale: float = 1.0,
                               col_offset=0, suppress_id: Optional[int] = None,
-                              chunk_v: int = 4096, quant=None):
+                              chunk_v: int = 4096, quant=None,
+                              col_limit: Optional[int] = None):
     """Streamed-head Stable-Max partials over one vocab shard.
 
     hidden (R, d), w_shard (d, V_loc) -> (m (R,), gidx (R,), s (R,)) with s
@@ -247,7 +253,8 @@ def fused_head_local_partials(hidden: jax.Array, w_shard: jax.Array,
     def body(carry, c):
         m, idx, s = carry
         z, col = _stream_chunk(hidden, w_shard, c, chunk, V, fmt,
-                               logit_scale, suppress_id, col_offset)
+                               logit_scale, suppress_id, col_offset,
+                               col_limit)
         m_new, s_new, local_m = _online_ms(m, s, z)
         big = jnp.int32(2 ** 30)
         local_i = jnp.min(jnp.where(z >= local_m[:, None], col, big), axis=-1)
@@ -322,11 +329,30 @@ def fused_head_stable_max(hidden: jax.Array, w_head: jax.Array,
     return conf.reshape(lead), idx.reshape(lead)
 
 
+def pad_head_for_mesh(w_head: jax.Array, n_shards: int) -> jax.Array:
+    """Zero-pad the (d, V) LM head so it splits into ``n_shards`` equal
+    vocab shards whose width is a multiple of the MX block.
+
+    Shard boundaries on 32-column multiples keep per-shard fake-quant
+    blocks aligned with full-row blocks (zero pad columns never raise a
+    block's max-abs scale), so sharded greedy argmax stays bit-identical
+    to the single-device fused stream; pad logits are masked out via the
+    ``col_limit`` of ``fused_head_local_partials``.  No-op when already
+    aligned — the serving engine pads once at construction."""
+    step = n_shards * mx.MX_BLOCK
+    V = w_head.shape[-1]
+    Vp = -(-V // step) * step
+    if Vp != V:
+        w_head = jnp.pad(w_head, ((0, 0), (0, Vp - V)))
+    return w_head
+
+
 def sharded_fused_head_stable_max(hidden: jax.Array, w_shard: jax.Array,
                                   axis_name: str, fmt: str = "none", *,
                                   logit_scale: float = 1.0,
                                   suppress_id: Optional[int] = None,
-                                  chunk_v: int = 4096, quant=None
+                                  chunk_v: int = 4096, quant=None,
+                                  col_limit: Optional[int] = None
                                   ) -> Tuple[jax.Array, jax.Array]:
     """Fused head + Stable-Max with the LM head sharded on ``axis_name``
     (runs inside shard_map): each chip streams its own (d, V/n) shard
@@ -338,10 +364,37 @@ def sharded_fused_head_stable_max(hidden: jax.Array, w_shard: jax.Array,
     m, gidx, s = fused_head_local_partials(
         hidden.reshape(-1, hidden.shape[-1]), w_shard, fmt,
         logit_scale=logit_scale, col_offset=shard * vloc,
-        suppress_id=suppress_id, chunk_v=chunk_v, quant=quant)
+        suppress_id=suppress_id, chunk_v=chunk_v, quant=quant,
+        col_limit=col_limit)
     conf, idx = combine_partials(m, gidx, s, axis_name)
     lead = hidden.shape[:-1]
     return conf.reshape(lead), idx.reshape(lead)
+
+
+def sharded_fused_sampling_step_full(hidden: jax.Array, w_shard: jax.Array,
+                                     x: jax.Array, mask_id: int,
+                                     k: jax.Array, cfg: SamplingConfig,
+                                     rng: Optional[jax.Array] = None, *,
+                                     axis_name: str, logit_scale: float = 1.0,
+                                     quant=None, chunk_v: int = 4096,
+                                     col_limit: Optional[int] = None
+                                     ) -> Tuple[jax.Array, jax.Array,
+                                                jax.Array]:
+    """``fused_sampling_step_full`` inside shard_map with the LM head
+    column-sharded on ``axis_name``: per-shard streamed partials, the
+    one-pmax/psum/pmin combine, then the (replicated-per-shard) transfer
+    selection and commit.  Greedy only — the counter-Gumbel temperature
+    path needs a second best-score combine and is not wired up yet."""
+    if cfg.temperature > 0.0 and rng is not None:
+        raise NotImplementedError(
+            "vocab-sharded sampling supports greedy decoding only "
+            "(temperature == 0)")
+    m_idx = x == mask_id
+    sup = mask_id if cfg.suppress_mask_token else None
+    conf, x0 = sharded_fused_head_stable_max(
+        hidden, w_shard, axis_name, cfg.fmt, logit_scale=logit_scale,
+        suppress_id=sup, chunk_v=chunk_v, quant=quant, col_limit=col_limit)
+    return _select_and_commit(conf, x0, x, m_idx, k, cfg, rng)
 
 
 # ---------------------------------------------------------------------------

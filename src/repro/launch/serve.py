@@ -51,8 +51,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--mode", default="warm", choices=["warm", "none"],
                     help="engine tick mode: pooled warm step / full recompute")
     ap.add_argument("--policy", default="fifo",
-                    choices=["fifo", "sgf", "slowfast"])
+                    choices=["fifo", "sgf", "sjf", "slowfast"])
     ap.add_argument("--slowfast-threshold", type=float, default=0.9)
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="run ticks shard_mapped over a (data, model) debug "
+                         "mesh, e.g. --mesh 2,4 (needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--mixed", action="store_true",
                     help="vary request prompt/gen lengths across the trace")
     ap.add_argument("--breakdown", action="store_true",
@@ -78,17 +82,24 @@ def _fwd_kw(cfg, model, params, batch):
     return kw
 
 
-def run_legacy(args, cfg, model, params, dcfg) -> None:
+def run_legacy(args, cfg, model, params, dcfg, mesh=None) -> None:
     fwd_kw = _fwd_kw(cfg, model, params, args.batch)
+    if mesh is not None:
+        # place once, outside the timed loop — generate()'s own placement
+        # then no-ops instead of re-broadcasting params per request
+        params = diffusion.place_spmd_params(params, mesh)
     rng = jax.random.PRNGKey(args.seed)
     total_tokens = 0
     t_total = 0.0
     for req in range(args.requests):
-        rng, r1 = jax.random.split(rng)
+        # independent keys for the synthetic prompt draw and the sampling
+        # rng chain — reusing one key correlates data with sampling noise
+        rng, r_prompt, r_gen = jax.random.split(rng, 3)
         prompt = jax.random.randint(
-            r1, (args.batch, args.prompt_len), 0, cfg.vocab - 2)
+            r_prompt, (args.batch, args.prompt_len), 0, cfg.vocab - 2)
         t0 = time.time()
-        out = diffusion.generate(model, params, prompt, dcfg, rng=r1, **fwd_kw)
+        out = diffusion.generate(model, params, prompt, dcfg, rng=r_gen,
+                                 mesh=mesh, **fwd_kw)
         out.block_until_ready()
         dt = time.time() - t0
         tag = "warmup+compile" if req == 0 else "steady"
@@ -125,7 +136,7 @@ def make_requests(args, cfg, seed: int) -> list:
     return reqs
 
 
-def run_engine(args, cfg, model, params, dcfg) -> None:
+def run_engine(args, cfg, model, params, dcfg, mesh=None) -> None:
     num_slots = args.slots or args.batch
     max_seq = args.prompt_len + args.gen_len
     policy = (get_policy("slowfast", threshold=args.slowfast_threshold)
@@ -133,18 +144,11 @@ def run_engine(args, cfg, model, params, dcfg) -> None:
     reqs = make_requests(args, cfg, args.seed)
     fwd_kw = _fwd_kw(cfg, model, params, num_slots)
 
-    # warmup run compiles the tick (excluded from the reported numbers)
-    warm = ServingEngine(model, params, dcfg, num_slots=num_slots,
-                         max_seq_len=max_seq, mode=args.mode, policy=policy,
-                         rng=jax.random.PRNGKey(args.seed),
-                         breakdown=args.breakdown, fwd_kw=fwd_kw)
-    warm.run(make_requests(args, cfg, args.seed + 1)[:num_slots])
-    del warm                 # frees the warmup engine's KV pool before timing
-
     eng = ServingEngine(model, params, dcfg, num_slots=num_slots,
                         max_seq_len=max_seq, mode=args.mode, policy=policy,
                         rng=jax.random.PRNGKey(args.seed),
-                        breakdown=args.breakdown, fwd_kw=fwd_kw)
+                        breakdown=args.breakdown, fwd_kw=fwd_kw, mesh=mesh)
+    eng.warmup()    # compile off-clock: the timed ticks charge no jit time
     completed = eng.run(reqs)
     for c in completed[: min(8, len(completed))]:
         print(f"request {c.uid}: P={c.prompt_len} gen={c.gen_length} "
@@ -154,8 +158,26 @@ def run_engine(args, cfg, model, params, dcfg) -> None:
         n_masked = int((c.tokens[c.prompt_len:] == cfg.mask_id).sum())
         assert n_masked == 0, f"request {c.uid}: {n_masked} masks left"
     print(f"engine: slots={num_slots} mode={args.mode} "
-          f"policy={policy.name} pool={eng.pool.stats()}")
+          f"policy={policy.name} pool={eng.pool.stats()}"
+          + (f" mesh={dict(mesh.shape)}" if mesh is not None else ""))
     print(eng.metrics.format_summary())
+
+
+def make_mesh_arg(spec: str):
+    """'--mesh D,M' -> a (data, model) debug mesh (CPU: force host devices
+    via XLA_FLAGS=--xla_force_host_platform_device_count=N first)."""
+    from repro.launch.mesh import make_debug_mesh
+    try:
+        data, model_ax = (int(v) for v in spec.split(","))
+    except ValueError:
+        raise SystemExit(f"--mesh expects DATA,MODEL integers, got {spec!r}")
+    need = data * model_ax
+    have = len(jax.devices())
+    if have < need:
+        raise SystemExit(
+            f"--mesh {spec} needs {need} devices but only {have} visible; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    return make_debug_mesh(data, model_ax)
 
 
 def main(argv=None):
@@ -164,10 +186,13 @@ def main(argv=None):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     dcfg = make_dcfg(args)
+    mesh = make_mesh_arg(args.mesh) if args.mesh else None
     if args.legacy:
-        run_legacy(args, cfg, model, params, dcfg)
+        if mesh is not None and args.cache != "none":
+            raise SystemExit("--mesh --legacy requires --cache none")
+        run_legacy(args, cfg, model, params, dcfg, mesh=mesh)
     else:
-        run_engine(args, cfg, model, params, dcfg)
+        run_engine(args, cfg, model, params, dcfg, mesh=mesh)
 
 
 if __name__ == "__main__":

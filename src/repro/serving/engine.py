@@ -21,6 +21,14 @@ Tick modes:
   * ``warm``: every tick is a warm step through the pooled KV cache — all
     KV recomputed and rewritten via the BAOS smoothing/quantization path,
     so serving exercises the paper's quantized-cache attention each step.
+
+With ``mesh=`` (a ``(data, model)`` mesh) every tick runs shard_mapped SPMD
+(docs/sharded_serving.md): batch slots shard over the data axis, the LM-head
+columns over the model axis — each chip streams only its (d, V/n) head shard
+and the per-chip Stable-Max partials merge with one pmax/psum/pmin.  The
+head param is resharded (and MX-block-pad-aligned) once at construction.
+Call :meth:`warmup` before timed runs so jit compilation never pollutes the
+virtual clock.
 """
 from __future__ import annotations
 
@@ -91,7 +99,8 @@ class ServingEngine:
                  num_slots: int = 4, max_seq_len: int = 128,
                  mode: str = "warm", policy: Optional[Policy] = None,
                  rng: Optional[jax.Array] = None, jit_steps: bool = True,
-                 breakdown: bool = False, fwd_kw: Optional[dict] = None):
+                 breakdown: bool = False, fwd_kw: Optional[dict] = None,
+                 mesh=None):
         if mode not in ("warm", "none"):
             raise ValueError(f"unknown engine mode {mode!r}")
         self.model = model
@@ -108,9 +117,39 @@ class ServingEngine:
         # tick fns rather than passing it as a runtime kwarg
         self._quant = self.fwd_kw.pop("quant", None)
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.mesh = mesh
+        if mesh is not None:
+            if breakdown:
+                raise ValueError(
+                    "breakdown timing is not supported under a mesh (the "
+                    "SPMD tick is one fused shard_map executable)")
+            if self.fwd_kw:
+                raise ValueError(
+                    "mesh serving does not support extra forward kwargs")
+            # validates mesh axes and model/dcfg (fused head path, greedy)
+            # before any params["lm_head"] access; lru-cached, so the
+            # re-fetch below is free
+            diffusion.get_spmd_tick_fn(model, dcfg, self.mask_id, mesh,
+                                       jit_steps=jit_steps,
+                                       quant=self._quant)
+            if num_slots % mesh.shape["data"]:
+                raise ValueError(
+                    f"num_slots {num_slots} must be divisible by the data "
+                    f"axis size {mesh.shape['data']}")
+            # one-time resharding: LM-head columns over 'model' (zero-padded
+            # to MX-aligned shard boundaries), everything else replicated —
+            # ticks then never move params again
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            self.params = diffusion.place_spmd_params(params, mesh)
+            self._row_sharding = NamedSharding(mesh, P("data", None))
+        else:
+            self._row_sharding = None
 
         self.pool = CachePool(model, num_slots, max_seq_len,
                               with_cache=(mode == "warm"))
+        if mesh is not None and self.pool.cache is not None:
+            self.pool.cache = jax.device_put(
+                self.pool.cache, NamedSharding(mesh, P(None, "data")))
         self.slots: List[Optional[_Slot]] = [None] * num_slots
         self.slot_of_uid: Dict[int, int] = {}
         self.queue: List[Request] = []
@@ -121,20 +160,33 @@ class ServingEngine:
         L, T = dcfg.block_length, dcfg.steps_per_block
         self._ksched = np.asarray(
             schedule_lib.linear_unmask_schedule(L, T))        # (T,)
-        self.x = jnp.full((num_slots, max_seq_len), self.mask_id, jnp.int32)
+        self.x = self._put_rows(
+            jnp.full((num_slots, max_seq_len), self.mask_id, jnp.int32))
         pos = np.arange(max_seq_len)
         # idle rows keep one valid key so their (discarded) attention rows
         # never produce an all-masked softmax
         self._valid_np = np.tile(pos < 1, (num_slots, 1))
-        self.kv_valid = jnp.asarray(self._valid_np)
+        self.kv_valid = self._put_rows(jnp.asarray(self._valid_np))
+        self._kv_dirty = False
+        self.kv_valid_uploads = 0           # host->device refreshes (1/tick)
 
-        if breakdown:
+        if mesh is not None:
+            self._tick_fn = diffusion.get_spmd_tick_fn(
+                model, dcfg, self.mask_id, mesh, jit_steps=jit_steps,
+                quant=self._quant)
+        elif breakdown:
             self._fwd_fn, self._smp_fn = diffusion.get_tick_stage_fns(
                 model, dcfg, self.mask_id, jit_steps, quant=self._quant)
             self._tick_fn = None
         else:
             self._tick_fn = diffusion.get_tick_fn(
                 model, dcfg, self.mask_id, jit_steps, quant=self._quant)
+
+    def _put_rows(self, a: jax.Array) -> jax.Array:
+        """Pin a (num_slots, ...) array to the data-axis sharding (no-op
+        without a mesh)."""
+        return a if self._row_sharding is None \
+            else jax.device_put(a, self._row_sharding)
 
     # -- request lifecycle --------------------------------------------------
 
@@ -166,9 +218,12 @@ class ServingEngine:
             self.slot_of_uid[pick.uid] = slot
             row = np.full((self.max_seq_len,), self.mask_id, np.int32)
             row[:pick.prompt_len] = np.asarray(pick.prompt, np.int32)
-            self.x = self.x.at[slot].set(jnp.asarray(row))
+            # re-pin: the eager scatter's output sharding drifts from the
+            # tick's P('data', None) spec, which would retrigger a jit
+            # compile on the first timed tick after warmup()
+            self.x = self._put_rows(self.x.at[slot].set(jnp.asarray(row)))
             self._valid_np[slot] = np.arange(self.max_seq_len) < pick.total_len
-            self.kv_valid = jnp.asarray(self._valid_np)
+            self._kv_dirty = True      # uploaded once per tick, not per admit
             self.metrics.request_admitted(pick.uid, self.now)
 
     def _release(self, slot: int, x_host: np.ndarray) -> None:
@@ -183,7 +238,7 @@ class ServingEngine:
         self.slots[slot] = None
         del self.slot_of_uid[req.uid]
         self._valid_np[slot] = np.arange(self.max_seq_len) < 1
-        self.kv_valid = jnp.asarray(self._valid_np)
+        self._kv_dirty = True          # uploaded once per tick, not per free
         self.pool.release(slot)
 
     # -- stepping -----------------------------------------------------------
@@ -199,6 +254,36 @@ class ServingEngine:
     def _next_arrival(self) -> Optional[float]:
         return min((r.arrival_time for r in self.queue), default=None)
 
+    def _flush_kv_valid(self) -> None:
+        """One batched host->device refresh of the (num_slots, max_seq_len)
+        validity mask after admission/release settles — admitting or
+        releasing N requests in a tick costs one upload, not N."""
+        if self._kv_dirty:
+            self.kv_valid = self._put_rows(jnp.asarray(self._valid_np))
+            self._kv_dirty = False
+            self.kv_valid_uploads += 1
+
+    def warmup(self) -> "ServingEngine":
+        """Compile the tick executable(s) with a dummy zero-commit tick,
+        leaving the virtual clock, rng chain, metrics, canvas, and KV pool
+        untouched — so the first *timed* tick charges no jit compile time
+        to ``now`` (latency percentiles / tokens_per_s stay clean)."""
+        self._flush_kv_valid()
+        B = self.num_slots
+        bs = jnp.zeros((B,), jnp.int32)
+        k = jnp.zeros((B,), jnp.int32)           # commits nothing
+        srng = jax.random.PRNGKey(0)             # self.rng not advanced
+        cache = self.pool.cache if self.mode == "warm" else None
+        if self.breakdown:
+            feats, _ = self._fwd_fn(self.params, self.x, self.kv_valid, bs,
+                                    cache, **self.fwd_kw)
+            out = self._smp_fn(self.params, feats, self.x, bs, k, srng)
+        else:
+            out = self._tick_fn(self.params, self.x, self.kv_valid, bs, k,
+                                srng, cache, **self.fwd_kw)
+        jax.block_until_ready(out)               # outputs discarded
+        return self
+
     def tick(self) -> bool:
         """Admit, run one fused batched step, advance slot states.
 
@@ -210,6 +295,7 @@ class ServingEngine:
                 return False
             self.now = max(self.now, nxt)     # fast-forward through idle gap
             self._admit()
+        self._flush_kv_valid()
 
         T = self.dcfg.steps_per_block
         L = self.dcfg.block_length

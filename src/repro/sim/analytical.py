@@ -217,6 +217,34 @@ def fused_head_sampling_stage(B: int, L: int, V: int, d: int, hw: HWConfig,
     return c
 
 
+def sharded_fused_head_sampling_stage(B: int, L: int, V: int, d: int,
+                                      hw: HWConfig, *, model_shards: int = 1,
+                                      data_shards: int = 1,
+                                      w_bytes: float = 0.5,
+                                      act_bytes: float = 2.0) -> Cost:
+    """*Per-chip* cost of the SPMD fused head + Stable-Max tick over a
+    (data, model) mesh (core/diffusion.get_spmd_tick_fn).
+
+    The data axis shards the B*L sampled rows; the model axis shards the
+    (d, V) head columns.  Each chip streams its own (d, V/n_model) shard
+    through the online reduction — per-chip sampling HBM traffic drops from
+    O(R*d + d*V) to O(R_loc*d + d*V/n_model), i.e. the dominant weight
+    stream shrinks linearly in the model-axis size.  The combine is one
+    pmax + psum + pmin of three R_loc-length partial vectors ((m, idx, S)
+    per row), charged here as interconnect bytes — vanishing next to the
+    head stream."""
+    B_loc = -(-B // data_shards)
+    vloc = -(-V // model_shards)
+    # per-chip view == the unsharded fused stage at (B_loc, vloc) — delegate
+    # so the two models can never drift (ratio_vs_1 baselines on equality)
+    c = fused_head_sampling_stage(B_loc, L, vloc, d, hw, w_bytes=w_bytes,
+                                  act_bytes=act_bytes)
+    if model_shards > 1:
+        combine_bytes = 2.0 * 3 * B_loc * L * 4.0   # send+recv x (m, idx, S)
+        c += Cost(t_mem=combine_bytes / hw.hbm_bw, hbm_bytes=combine_bytes)
+    return c
+
+
 def unfused_head_sampling_stage(B: int, L: int, V: int, d: int,
                                 hw: HWConfig, *, fmt: str = "mxfp8_e4m3",
                                 w_bytes: float = 0.5, act_bytes: float = 2.0,
@@ -339,15 +367,19 @@ def end_to_end(cfg: ModelConfig, hw: HWConfig, *, B: int, prompt: int,
                w_bytes: float = 0.5, kv_bytes: float = 0.5,
                two_pass_sampling: bool = True,
                sampling_engine: str = "dart",
-               v_chunk: Optional[int] = None) -> E2EResult:
+               v_chunk: Optional[int] = None,
+               model_shards: int = 1, data_shards: int = 1) -> E2EResult:
     """T_block = T_warm(L_tot) + (steps-1) * T_refine(L)  (paper §4.1).
 
     ``sampling_engine='fused'`` models the fused LM-head + Stable-Max path:
     the head GEMM leaves the model pass (logits_rows=0) and its streamed
-    cost is charged to the sampling stage instead."""
+    cost is charged to the sampling stage instead.  ``'sharded'`` is the
+    per-chip SPMD variant: the sampling stage sees only this chip's
+    (B/data_shards) rows x (V/model_shards) head columns (the model pass is
+    still charged globally — forward TP is out of scope here)."""
     n_blocks = gen_len // block_len
     s_tot = prompt + gen_len
-    lrows = 0 if sampling_engine == "fused" else B * block_len
+    lrows = 0 if sampling_engine in ("fused", "sharded") else B * block_len
     model = Cost()
     samp = Cost()
     for _ in range(n_blocks):
@@ -374,6 +406,11 @@ def end_to_end(cfg: ModelConfig, hw: HWConfig, *, B: int, prompt: int,
             elif sampling_engine == "fused":
                 samp += fused_head_sampling_stage(
                     B, block_len, cfg.vocab, cfg.d_model, hw,
+                    w_bytes=w_bytes)
+            elif sampling_engine == "sharded":
+                samp += sharded_fused_head_sampling_stage(
+                    B, block_len, cfg.vocab, cfg.d_model, hw,
+                    model_shards=model_shards, data_shards=data_shards,
                     w_bytes=w_bytes)
             else:
                 samp += sampling_stage(B, block_len, cfg.vocab, hw,
