@@ -1,0 +1,126 @@
+"""Single benchmark-regression gate for CI.
+
+Validates every ``BENCH_*.json`` in the working directory (or the files
+passed as arguments): parity flags, modeled-ratio floors, and the
+cycle-sim agreement bands.  Prints a one-table summary of the perf
+trajectory and exits nonzero on any regression — the workflow calls this
+once per job instead of scattering heredoc asserts.
+
+    PYTHONPATH=src python -m benchmarks.check_bench [files...]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+from typing import Callable, Dict, List, Tuple
+
+# (label, value, ok) triples per file; ok=None = informational only
+Check = Tuple[str, object, object]
+
+
+def _check_fused_head(b: dict) -> List[Check]:
+    m, mod = b["measured"], b["modeled_llada8b_tick"]
+    return [
+        ("greedy_token_parity", m["greedy_token_parity"],
+         m["greedy_token_parity"] is True),
+        ("measured_speedup", f"{m['speedup']:.2f}x", None),
+        ("modeled_ratio_vs_sliced", f"{mod['ratio_vs_sliced']:.2f}x",
+         mod["ratio_vs_sliced"] >= 5.0),
+        ("modeled_ratio_vs_legacy", f"{mod['ratio_vs_legacy']:.2f}x", None),
+    ]
+
+
+def _check_sharded_tick(b: dict) -> List[Check]:
+    m, pts = b["measured"], {p["model_shards"]: p
+                             for p in b["modeled_llada8b_tick"]["points"]}
+    return [
+        ("greedy_token_parity", m["greedy_token_parity"],
+         m["greedy_token_parity"] is True),
+        ("sharded_meshes_ran", m["sharded_meshes_ran"],
+         m["sharded_meshes_ran"] is True),
+        # the (d, V/n) head stream must shrink exactly linearly; total
+        # per-chip bytes track it until the R*d floor takes over
+        ("head_ratio_n4", f"{pts[4]['head_ratio_vs_1']:.2f}x",
+         pts[4]["head_ratio_vs_1"] == 4.0),
+        ("per_chip_ratio_n4", f"{pts[4]['ratio_vs_1']:.2f}x",
+         pts[4]["ratio_vs_1"] >= 2.5),
+    ]
+
+
+def _check_cycle_sim(b: dict) -> List[Check]:
+    cv, tick, a6 = b["crossval"], b["tick_capture"], b["modeled_a6000"]
+    out: List[Check] = []
+    for path in ("fused", "unfused", "legacy", "sharded", "engine"):
+        r = cv[path]
+        out.append((f"crossval_{path}",
+                    f"ratio={r['ratio_vs_analytical']:.3f} in {r['band']}",
+                    r["within_band"]))
+    out.append(("all_within_band", cv["all_within_band"],
+                cv["all_within_band"] is True))
+    out.append(("tick_fused_matches_standalone",
+                tick["fused_matches_standalone"],
+                tick["fused_matches_standalone"] is True))
+    # None = not enough host devices to run the shard_mapped capture;
+    # informational there, hard failure on an actual mismatch
+    sm = tick["sharded_matches_standalone"]
+    out.append(("tick_sharded_matches_standalone", sm,
+                None if sm is None else sm is True))
+    for cache in ("dual", "none"):
+        s = a6[cache]
+        out.append((f"a6000_speedup_{cache}",
+                    f"{s['speedup_vs_a6000']:.2f}x "
+                    f"(paper {s['paper_dart_x']}x)",
+                    s["speedup_vs_a6000"] >= 2.0))
+    return out
+
+
+CHECKS: Dict[str, Callable[[dict], List[Check]]] = {
+    "fused_head": _check_fused_head,
+    "sharded_tick": _check_sharded_tick,
+    "cycle_sim": _check_cycle_sim,
+}
+
+
+def main(argv: List[str]) -> int:
+    files = sorted(argv) if argv else sorted(glob.glob("BENCH_*.json"))
+    if not files:
+        print("check_bench: no BENCH_*.json found — run the smoke "
+              "benchmarks first", file=sys.stderr)
+        return 2
+    failures = 0
+    width = 44
+    print(f"{'file':26s} {'check':{width}s} {'value':34s} ok")
+    print("-" * (26 + width + 34 + 4))
+    for path in files:
+        # stale/truncated scratch files must show up as a labeled FAIL for
+        # that file, not kill the gate before the remaining files run
+        try:
+            with open(path) as f:
+                b = json.load(f)
+            name = b.get("benchmark", "?")
+            fn = CHECKS.get(name)
+            checks = None if fn is None else fn(b)
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            failures += 1
+            print(f"{path:26s} {'(unreadable/stale payload)':{width}s} "
+                  f"{type(e).__name__ + ': ' + str(e)[:30]:34s} FAIL")
+            continue
+        if checks is None:
+            print(f"{path:26s} {'(no validator for ' + name + ')':{width}s} "
+                  f"{'-':34s} WARN")
+            continue
+        for label, value, ok in checks:
+            mark = "-" if ok is None else ("PASS" if ok else "FAIL")
+            if ok is False:
+                failures += 1
+            print(f"{path:26s} {label:{width}s} {str(value):34s} {mark}")
+    if failures:
+        print(f"\ncheck_bench: {failures} check(s) FAILED", file=sys.stderr)
+        return 1
+    print("\ncheck_bench: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.core import baos as baos_lib
 from repro.core import sampling as sampling_lib
 from repro.core import schedule as schedule_lib
+from repro.sim import trace as trace_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -367,6 +368,16 @@ def tick_forward(model, params, x: jax.Array, kv_valid: jax.Array,
     L = dcfg.block_length
     mode = head_feed_mode(model, dcfg)
     extra = {} if mode == "logits" else {"head_mode": "hidden"}
+    if trace_lib.is_active():
+        # opaque transformer marker (costed by the analytical per-phase
+        # model in the hybrid e2e); the legacy path's full-sequence head
+        # GEMM + logits writeback is the one head cost paid in-forward, so
+        # it is charged here rather than in the sampling stage
+        trace_lib.emit("XU_FORWARD", (B, s_tot, int(model.cfg.d_model)),
+                       stage="forward", note=f"cache={cache is not None}")
+        if mode == "logits":
+            trace_lib.emit_legacy_head(B * s_tot, int(model.cfg.d_model),
+                                       int(model.cfg.vocab))
     if cache is None:
         feats, _, _ = model.forward(
             params, tokens=x, cache=None, seg_start=0, kv_valid=kv_valid,
@@ -419,16 +430,25 @@ def tick_sample(params, feats: jax.Array, x: jax.Array,
 
 def batched_tick(model, params, x, kv_valid, block_start, k, srng, cache,
                  dcfg: DiffusionConfig = None, mask_id: int = 0, quant=None,
-                 **fwd_kw):
+                 tracer=None, **fwd_kw):
     """One fused engine tick: single forward + single Stable-Max sampling
     call over all serving slots.  Also the cache_mode='none' step of the
     state machine (block_start broadcast), so a one-slot engine runs the
-    exact computation ``generate()`` runs — bit-identical greedy tokens."""
-    feats, new_cache = tick_forward(model, params, x, kv_valid, block_start,
-                                    cache, dcfg, quant=quant, **fwd_kw)
-    x_new, conf_min, masks_left = tick_sample(
-        params, feats, x, block_start, k, srng, dcfg, mask_id, model=model,
-        quant=quant)
+    exact computation ``generate()`` runs — bit-identical greedy tokens.
+
+    ``tracer`` (a sim.trace.Tracer) records the tick's instruction stream
+    for the cycle simulator while jax traces this call — pass it only on
+    un-jitted invocations (sim.trace.capture_tick_trace does this via
+    jax.eval_shape; compiled ticks never re-trace, so a tracer would see
+    nothing).  Emission hooks are no-ops when ``tracer`` is None.
+    """
+    with trace_lib.activate(tracer):
+        feats, new_cache = tick_forward(model, params, x, kv_valid,
+                                        block_start, cache, dcfg,
+                                        quant=quant, **fwd_kw)
+        x_new, conf_min, masks_left = tick_sample(
+            params, feats, x, block_start, k, srng, dcfg, mask_id,
+            model=model, quant=quant)
     return x_new, new_cache, conf_min, masks_left
 
 

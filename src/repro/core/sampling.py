@@ -28,12 +28,61 @@ by fake-quantizing the logits to ``fmt`` before the reductions.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import mx
+from repro.sim import isa as isa_lib
+from repro.sim import trace as trace_lib
+
+# Modeled storage format of the LM-head weight stream for trace capture
+# (matches sim/analytical's w_bytes=0.5 MXINT4 default).
+TRACE_W_FMT = "mxint4"
+
+
+def _rows_of(a: jax.Array) -> int:
+    """Static product of the leading (non-vocab) dims — shapes are always
+    concrete under jax tracing, so trace hooks can read them."""
+    return int(math.prod(a.shape[:-1]))
+
+
+def _emit_head_stream(R: int, d: int, chunk: int, n_chunks: int,
+                      gumbel: bool = False) -> None:
+    """Trace hook for the streamed-head chunk loop (the lax.scan bodies
+    below trace once regardless of trip count, so the per-chunk op group is
+    emitted here, from the real chunk grid, and the scan runs under
+    ``trace_lib.suppress()``).  One vocab chunk = weight slab burst into
+    VMEM, MXU logit tile, online (max+idx, exp, sum) reduction, carry
+    rescale; the slab and logit tile are alloc/freed every chunk so the
+    simulator's allocator observes the in-place reuse."""
+    trace_lib.emit("HBM_RD", (R, d), "bf16", "stream", "hidden")
+    trace_lib.emit("SRAM_ALLOC", (3, R), "fp32", "stream", "carry")
+    for _ in range(n_chunks):
+        trace_lib.emit("SRAM_ALLOC", (d, chunk), TRACE_W_FMT, "stream",
+                       "w_slab")
+        trace_lib.emit("HBM_RD", (d, chunk), TRACE_W_FMT, "stream", "head_w")
+        trace_lib.emit("SRAM_ALLOC", (isa_lib.TILE_R, chunk), "fp32",
+                       "stream", "logit_tile")
+        trace_lib.emit("GEMM_TILE", (R, d, chunk), stage="stream")
+        trace_lib.emit("V_RED_MAX_IDX", (R, chunk), stage="stream")
+        trace_lib.emit("V_EXP_V", (R, chunk), stage="stream")
+        trace_lib.emit("V_RED_SUM", (R, chunk), stage="stream")
+        if gumbel:
+            trace_lib.emit("V_GUMBEL", (R, chunk), stage="stream")
+            trace_lib.emit("V_ADD_VV", (R, chunk), stage="stream",
+                           note="gumbel_score")
+            trace_lib.emit("V_RED_MAX", (R, chunk), stage="stream",
+                           note="best_score")
+            trace_lib.emit("V_SELECT_INT", (3, R), stage="stream",
+                           note="best_update")
+        trace_lib.emit("V_ADD_VV", (R,), stage="stream",
+                       note="online_rescale")
+        trace_lib.emit("SRAM_FREE", stage="stream", note="logit_tile")
+        trace_lib.emit("SRAM_FREE", stage="stream", note="w_slab")
+    trace_lib.emit("SRAM_FREE", stage="stream", note="carry")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +110,20 @@ def stable_max(logits: jax.Array, fmt: str = "none",
     the comparator skipping that index, so the -inf must never enter the MX
     block scaling (it would zero its 31 neighbours).
     """
+    if trace_lib.is_active():
+        rows, V = _rows_of(logits), logits.shape[-1]
+        trace_lib.emit("HBM_RD", (rows, V), fmt, "stream", "logits")
+        trace_lib.emit("SRAM_ALLOC", (3, rows), "fp32", "stream", "carry")
+        if temperature > 0.0 and rng is not None:
+            trace_lib.emit("V_GUMBEL", (rows, V), stage="stream")
+            trace_lib.emit("V_ADD_VV", (rows, V), stage="stream",
+                           note="gumbel_score")
+        trace_lib.emit("V_RED_MAX_IDX", (rows, V), stage="stream")
+        trace_lib.emit("V_EXP_V", (rows, V), stage="stream")
+        trace_lib.emit("V_RED_SUM", (rows, V), stage="stream")
+        trace_lib.emit("SRAM_FREE", stage="stream", note="carry")
+        trace_lib.emit("S_RECIP", (rows,), stage="tail")
+        trace_lib.emit("S_ST", (2 * rows,), stage="tail", note="conf_idx_wb")
     z = mx.mx_fake_quant(logits, fmt).astype(jnp.float32)
     if suppress_id is not None:
         v = z.shape[-1]
@@ -110,6 +173,8 @@ def combine_partials(m: jax.Array, gidx: jax.Array, s: jax.Array,
     ``axis_name``:  m = max_i m_i, S = sum_i S_i * exp(m_i - m), idx from
     the shard owning the global max (lowest shard index breaks ties).
     One pmax + one psum + one pmin of scalars per position."""
+    if trace_lib.is_active():
+        trace_lib.emit_combine(int(math.prod(m.shape)))
     gm = jax.lax.pmax(m, axis_name)
     gs = jax.lax.psum(s * jnp.exp(m - gm), axis_name)
     big = jnp.int32(2 ** 30)
@@ -172,6 +237,12 @@ def head_logits(hidden: jax.Array, w_head: jax.Array, *,
     oracle — chunking the N axis leaves each output element's K-reduction
     untouched, which is what keeps fused and unfused greedy tokens
     bit-identical."""
+    if trace_lib.is_active():
+        M, K, N = _rows_of(hidden), hidden.shape[-1], w_head.shape[-1]
+        trace_lib.emit("HBM_RD", (M, K), "bf16", "head", "hidden")
+        trace_lib.emit("HBM_RD", (K, N), TRACE_W_FMT, "head", "head_w")
+        trace_lib.emit("GEMM_TILE", (M, K, N), stage="head")
+        trace_lib.emit("HBM_WR", (M, N), "bf16", "head", "logits")
     if quant is not None and quant.enabled:
         hidden, w_head = quant.acts(hidden), quant.weights(w_head)
     z = jax.lax.dot_general(
@@ -249,6 +320,8 @@ def fused_head_local_partials(hidden: jax.Array, w_shard: jax.Array,
     hidden, w_shard, V, chunk, n_chunks = _prep_stream(hidden, w_shard,
                                                        chunk_v, quant)
     col_offset = jnp.asarray(col_offset, jnp.int32)
+    if trace_lib.is_active():
+        _emit_head_stream(R, hidden.shape[-1], chunk, n_chunks)
 
     def body(carry, c):
         m, idx, s = carry
@@ -263,8 +336,9 @@ def fused_head_local_partials(hidden: jax.Array, w_shard: jax.Array,
 
     init = (jnp.full((R,), NEG_INF), jnp.zeros((R,), jnp.int32),
             jnp.zeros((R,), jnp.float32))
-    (m, idx, s), _ = jax.lax.scan(body, init,
-                                  jnp.arange(n_chunks, dtype=jnp.int32))
+    with trace_lib.suppress():
+        (m, idx, s), _ = jax.lax.scan(body, init,
+                                      jnp.arange(n_chunks, dtype=jnp.int32))
     return m, idx + col_offset, s
 
 
@@ -294,10 +368,18 @@ def fused_head_stable_max(hidden: jax.Array, w_head: jax.Array,
         m, idx, s = fused_head_local_partials(
             h, w_head, fmt, logit_scale=logit_scale,
             suppress_id=suppress_id, chunk_v=chunk_v, quant=quant)
+        if trace_lib.is_active():
+            trace_lib.emit("S_RECIP", (h.shape[0],), stage="tail")
+            trace_lib.emit("S_ST", (2 * h.shape[0],), stage="tail",
+                           note="conf_idx_wb")
         return (1.0 / s).reshape(lead), idx.reshape(lead)
 
     R = h.shape[0]
     h, w_head, V, chunk, n_chunks = _prep_stream(h, w_head, chunk_v, quant)
+    if trace_lib.is_active():
+        _emit_head_stream(R, h.shape[-1], chunk, n_chunks, gumbel=True)
+        trace_lib.emit("S_RECIP", (R,), stage="tail")
+        trace_lib.emit("S_ST", (2 * R,), stage="tail", note="conf_idx_wb")
     seed = gumbel_seed(rng)
     rows = jnp.arange(R, dtype=jnp.int32)[:, None]
     zero = jnp.int32(0)
@@ -323,8 +405,9 @@ def fused_head_stable_max(hidden: jax.Array, w_head: jax.Array,
     init = (jnp.full((R,), NEG_INF), jnp.zeros((R,), jnp.float32),
             jnp.zeros((R,), jnp.int32), jnp.full((R,), NEG_INF),
             jnp.full((R,), NEG_INF))
-    (m, s, idx, _, z_at), _ = jax.lax.scan(
-        body, init, jnp.arange(n_chunks, dtype=jnp.int32))
+    with trace_lib.suppress():
+        (m, s, idx, _, z_at), _ = jax.lax.scan(
+            body, init, jnp.arange(n_chunks, dtype=jnp.int32))
     conf = jnp.exp(z_at - m) / s
     return conf.reshape(lead), idx.reshape(lead)
 
@@ -367,6 +450,9 @@ def sharded_fused_head_stable_max(hidden: jax.Array, w_shard: jax.Array,
         suppress_id=suppress_id, chunk_v=chunk_v, quant=quant,
         col_limit=col_limit)
     conf, idx = combine_partials(m, gidx, s, axis_name)
+    if trace_lib.is_active():
+        trace_lib.emit("S_ST", (2 * m.shape[0],), stage="tail",
+                       note="conf_idx_wb")
     lead = hidden.shape[:-1]
     return conf.reshape(lead), idx.reshape(lead)
 
@@ -416,6 +502,9 @@ def topk_transfer_mask(conf: jax.Array, mask_idx: jax.Array,
     full L*log(L) sorts per tick; on TPU the Pallas V_TOPK_MASK kernel
     (kernels/topk_mask.py) computes the rank entirely in VMEM."""
     B, L = conf.shape
+    if trace_lib.is_active():
+        trace_lib.emit("S_MAP_V_FP", (B * L,), stage="commit")
+        trace_lib.emit("V_TOPK_MASK_PER_ELT", (B * L,), stage="commit")
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if use_kernel:
@@ -468,6 +557,9 @@ def _select_and_commit(conf, x0, x, m_idx, k, cfg: SamplingConfig, rng
         select = jax.random.uniform(rng, conf.shape)
     x0 = jnp.where(m_idx, x0, x)                 # keep committed tokens
     transfer = topk_transfer_mask(select, m_idx, k)
+    if trace_lib.is_active():
+        trace_lib.emit("V_SELECT_INT", (2 * int(math.prod(x.shape)),),
+                       stage="commit")
     return commit_tokens(x, x0, transfer), transfer, conf
 
 

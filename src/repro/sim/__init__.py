@@ -1,0 +1,7 @@
+"""Performance simulators: closed-form analytical (sim.analytical) and the
+trace-driven cycle-level NPU model (sim.isa / sim.trace / sim.cycle)."""
+from repro.sim.isa import BYTES, ISA, NPUConfig          # noqa: F401
+from repro.sim.trace import (Trace, TraceOp, Tracer,     # noqa: F401
+                             capture_sampling_trace, capture_tick_trace)
+from repro.sim.cycle import (CROSSVAL_BAND, SimResult,   # noqa: F401
+                             crossval_sampling, end_to_end_cycle, simulate)

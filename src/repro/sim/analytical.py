@@ -20,6 +20,7 @@ import math
 from typing import Dict, Optional, Tuple
 
 from repro.models.transformer import ModelConfig
+from repro.sim.isa import BYTES, ISA  # shared fmt widths  # noqa: F401
 
 # ---------------------------------------------------------------------------
 # Hardware configuration (paper §6.2 operating point by default)
@@ -59,15 +60,13 @@ class HWConfig:
         return self.pes * self.freq
 
 
-# paper Table 3 single-instruction pipelined cycle counts
+# paper Table 3 single-instruction pipelined cycle counts — derived from
+# the cycle simulator's ISA (sim/isa.py) so the two simulators can never
+# disagree on a latency (retuning happens in exactly one table)
 LATENCY_LIB: Dict[str, int] = {
-    "V_ADD_VV": 7, "V_EXP_V": 7, "V_RED_MAX": 4, "V_RED_MAX_IDX": 4,
-    "V_RED_SUM": 20, "S_RECIP": 4, "S_ST": 1, "S_MAP_V_FP": 2,
-    "V_TOPK_MASK_PER_ELT": 1, "V_SELECT_INT": 2,
-}
+    name: instr.lat for name, instr in ISA.items()
+    if instr.engine in ("vector", "scalar")}
 
-BYTES = {"mxint4": 0.5, "mxint8": 1.0, "mxfp8_e4m3": 1.0, "mxfp4_e2m1": 0.5,
-         "bf16": 2.0, "fp32": 4.0, "fp64": 8.0, "none": 8.0}
 
 
 @dataclasses.dataclass
@@ -361,6 +360,39 @@ class E2EResult:
         return self.sampling_s / self.total_s
 
 
+def model_side_cost(cfg: ModelConfig, hw: HWConfig, *, B: int, prompt: int,
+                    gen_len: int, block_len: int, steps: int,
+                    cache_mode: str = "dual", w_bytes: float = 0.5,
+                    kv_bytes: float = 0.5, logits_rows: int = 0) -> Cost:
+    """Transformer-phase cost of one blocked-diffusion decode (warm +
+    refinement forwards per block, paper §4.1) *without* the sampling
+    stage.  ``end_to_end`` composes this with an analytical sampling
+    engine; sim/cycle.end_to_end_cycle composes it with the trace-driven
+    cycle simulator (which carries its own head work, hence
+    ``logits_rows=0`` there)."""
+    n_blocks = gen_len // block_len
+    s_tot = prompt + gen_len
+    model = Cost()
+    for _ in range(n_blocks):
+        if cache_mode == "none":
+            for _ in range(steps):
+                model += transformer_pass(cfg, B, s_tot, s_tot, hw,
+                                          w_bytes=w_bytes, kv_bytes=kv_bytes,
+                                          logits_rows=logits_rows)
+        else:
+            model += transformer_pass(cfg, B, s_tot, s_tot, hw,
+                                      w_bytes=w_bytes, kv_bytes=kv_bytes,
+                                      logits_rows=logits_rows)       # warm
+            seg = block_len if cache_mode == "dual" else \
+                (s_tot - prompt)  # prefix mode recomputes block+suffix
+            for _ in range(steps - 1):
+                model += transformer_pass(
+                    cfg, B, seg, s_tot, hw, kv_resident=(cache_mode == "dual"),
+                    w_bytes=w_bytes, kv_bytes=kv_bytes,
+                    logits_rows=logits_rows)
+    return model
+
+
 def end_to_end(cfg: ModelConfig, hw: HWConfig, *, B: int, prompt: int,
                gen_len: int, block_len: int, steps: int,
                cache_mode: str = "dual", sampling_fmt: str = "bf16",
@@ -378,27 +410,13 @@ def end_to_end(cfg: ModelConfig, hw: HWConfig, *, B: int, prompt: int,
     (B/data_shards) rows x (V/model_shards) head columns (the model pass is
     still charged globally — forward TP is out of scope here)."""
     n_blocks = gen_len // block_len
-    s_tot = prompt + gen_len
     lrows = 0 if sampling_engine in ("fused", "sharded") else B * block_len
-    model = Cost()
+    model = model_side_cost(cfg, hw, B=B, prompt=prompt, gen_len=gen_len,
+                            block_len=block_len, steps=steps,
+                            cache_mode=cache_mode, w_bytes=w_bytes,
+                            kv_bytes=kv_bytes, logits_rows=lrows)
     samp = Cost()
     for _ in range(n_blocks):
-        if cache_mode == "none":
-            for _ in range(steps):
-                model += transformer_pass(cfg, B, s_tot, s_tot, hw,
-                                          w_bytes=w_bytes, kv_bytes=kv_bytes,
-                                          logits_rows=lrows)
-        else:
-            model += transformer_pass(cfg, B, s_tot, s_tot, hw,
-                                      w_bytes=w_bytes, kv_bytes=kv_bytes,
-                                      logits_rows=lrows)           # warm
-            seg = block_len if cache_mode == "dual" else \
-                (s_tot - prompt)  # prefix mode recomputes block+suffix
-            for _ in range(steps - 1):
-                model += transformer_pass(
-                    cfg, B, seg, s_tot, hw, kv_resident=(cache_mode == "dual"),
-                    w_bytes=w_bytes, kv_bytes=kv_bytes,
-                    logits_rows=lrows)
         for _ in range(steps):
             if sampling_engine == "reference":
                 samp += reference_sampling_stage(B, block_len, cfg.vocab, hw,

@@ -1,0 +1,355 @@
+"""Instruction-trace capture from the real diffusion tick.
+
+Traces are **not hand-written**: emission hooks live inside the production
+sampling code (core/sampling.py, core/diffusion.py) and fire while JAX
+traces the tick, so the recorded op stream follows the real control flow —
+chunk counts from ``_prep_stream``, head-path routing from
+``head_feed_mode``, the vocab-sharded combine from ``combine_partials``.
+Because all shapes are static under jax tracing, a trace of the full
+LLaDA-8B tick costs nothing: ``capture_*`` below run the real functions
+under ``jax.eval_shape`` (no FLOPs, no parameter memory — params enter as
+``ShapeDtypeStruct``s from ``jax.eval_shape(model.init, ...)``).
+
+The emission hooks are no-ops unless a tracer is active (module-level
+context installed by ``activate``), so serving/jit paths pay nothing.
+Hooks inside ``lax.scan`` bodies would fire once regardless of trip count,
+so streamed loops emit their per-chunk op groups from the Python level
+(where the trip count is known) and wrap the scan itself in ``suppress()``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import math
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.sim import isa
+
+# ---------------------------------------------------------------------------
+# Trace data model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceOp:
+    """One recorded instruction: op name (an isa.ISA key), the logical
+    tensor shape it covers, storage format (memory/net ops), pipeline stage
+    label, and a free-form note (buffer names for SRAM ops)."""
+    op: str
+    shape: Tuple[int, ...] = ()
+    fmt: str = "none"
+    stage: str = "sampling"
+    note: str = ""
+
+    @property
+    def elems(self) -> int:
+        return int(math.prod(self.shape)) if self.shape else 0
+
+    @property
+    def bytes(self) -> float:
+        return self.elems * isa.fmt_bytes(self.fmt)
+
+    @property
+    def engine(self) -> str:
+        return isa.ISA[self.op].engine
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"op": self.op, "shape": list(self.shape), "fmt": self.fmt,
+                "stage": self.stage, "note": self.note}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "TraceOp":
+        return cls(op=d["op"], shape=tuple(int(s) for s in d["shape"]),
+                   fmt=d["fmt"], stage=d["stage"], note=d.get("note", ""))
+
+
+@dataclasses.dataclass
+class Trace:
+    ops: List[TraceOp] = dataclasses.field(default_factory=list)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    def __iter__(self) -> Iterator[TraceOp]:
+        return iter(self.ops)
+
+    def op_names(self) -> List[str]:
+        return [o.op for o in self.ops]
+
+    def stages(self) -> List[str]:
+        seen: List[str] = []
+        for o in self.ops:
+            if o.stage not in seen:
+                seen.append(o.stage)
+        return seen
+
+    def hbm_bytes(self) -> float:
+        return sum(o.bytes for o in self.ops if o.engine == "hbm")
+
+    def to_json(self) -> str:
+        return json.dumps({"meta": self.meta,
+                           "ops": [o.to_dict() for o in self.ops]})
+
+    @classmethod
+    def from_json(cls, s: str) -> "Trace":
+        d = json.loads(s)
+        return cls(ops=[TraceOp.from_dict(o) for o in d["ops"]],
+                   meta=d.get("meta", {}))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "Trace":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+class Tracer:
+    """Mutable op-stream collector installed via ``activate``."""
+
+    def __init__(self, meta: Optional[Dict[str, Any]] = None):
+        self.ops: List[TraceOp] = []
+        self.meta: Dict[str, Any] = dict(meta or {})
+        self._suppress = 0
+
+    def emit(self, op: str, shape: Sequence[int] = (), fmt: str = "none",
+             stage: str = "sampling", note: str = "") -> None:
+        if self._suppress:
+            return
+        if op not in isa.ISA:
+            raise ValueError(f"unknown trace op {op!r}")
+        self.ops.append(TraceOp(op=op, shape=tuple(int(s) for s in shape),
+                                fmt=fmt, stage=stage, note=note))
+
+    def finish(self) -> Trace:
+        return Trace(ops=list(self.ops), meta=dict(self.meta))
+
+
+# ---------------------------------------------------------------------------
+# Active-tracer plumbing (module-level so production code needs no threading)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[Tracer] = None
+
+
+def is_active() -> bool:
+    return _ACTIVE is not None and not _ACTIVE._suppress
+
+
+@contextlib.contextmanager
+def activate(tracer: Optional[Tracer]):
+    """Install ``tracer`` as the emission target (no-op for ``None``)."""
+    global _ACTIVE
+    if tracer is None:
+        yield
+        return
+    prev = _ACTIVE
+    _ACTIVE = tracer
+    try:
+        yield tracer
+    finally:
+        _ACTIVE = prev
+
+
+@contextlib.contextmanager
+def suppress():
+    """Silence emissions — wrap ``lax.scan``/``while`` calls whose bodies
+    contain hooks (the body traces once regardless of trip count; the caller
+    emits the real per-iteration op groups from Python instead)."""
+    if _ACTIVE is None:
+        yield
+        return
+    _ACTIVE._suppress += 1
+    try:
+        yield
+    finally:
+        _ACTIVE._suppress -= 1
+
+
+def emit(op: str, shape: Sequence[int] = (), fmt: str = "none",
+         stage: str = "sampling", note: str = "") -> None:
+    if _ACTIVE is not None:
+        _ACTIVE.emit(op, shape, fmt, stage, note)
+
+
+# ---------------------------------------------------------------------------
+# Shared emission patterns referenced from more than one real call site
+# ---------------------------------------------------------------------------
+
+
+def emit_combine(rows: int, stage: str = "combine") -> None:
+    """The vocab-sharded Stable-Max combine: one pmax + psum + pmin of
+    per-row (m, S, idx) partials, then the reciprocal.  Called from
+    ``core.sampling.combine_partials`` when it traces inside shard_map, and
+    reused by ``capture_sampling_trace(model_shards>1)`` which cannot bind
+    a mesh axis outside shard_map."""
+    emit("COLL_PMAX", (rows,), "fp32", stage, note="m")
+    emit("COLL_PSUM", (rows,), "fp32", stage, note="s_rescaled")
+    emit("COLL_PMIN", (rows,), "int32", stage, note="argmax_tiebreak")
+    emit("S_RECIP", (rows,), stage=stage)
+
+
+def emit_legacy_head(rows: int, d: int, V: int, stage: str = "head") -> None:
+    """The legacy full-logits LM head: GEMM over ``rows`` (= B*S for the
+    pre-fusion serving tick) with the (rows, V) bf16 logits written back to
+    HBM.  Called from ``core.diffusion.tick_forward`` for models on the
+    legacy head path, and by ``capture_sampling_trace('legacy')``."""
+    emit("HBM_RD", (rows, d), "bf16", stage, note="hidden")
+    emit("HBM_RD", (d, V), "mxint4", stage, note="head_w")
+    emit("GEMM_TILE", (rows, d, V), stage=stage)
+    emit("HBM_WR", (rows, V), "bf16", stage, note="logits")
+
+
+# ---------------------------------------------------------------------------
+# Capture entry points
+# ---------------------------------------------------------------------------
+
+
+def capture_sampling_trace(*, B: int, L: int, V: int, d: int,
+                           fmt: str = "mxfp8_e4m3",
+                           head_path: str = "fused",
+                           chunk_v: int = 4096,
+                           model_shards: int = 1,
+                           data_shards: int = 1,
+                           seq_len: Optional[int] = None,
+                           temperature: float = 0.0,
+                           mask_id: int = 0,
+                           logit_scale: float = 1.0) -> Trace:
+    """Record the sampling-stage op stream for one engine tick by running
+    the real sampling functions under ``jax.eval_shape``.
+
+    head_path: 'fused' (streamed head + Stable-Max), 'unfused'
+    (block-sliced head then Stable-Max), 'legacy' (full-sequence logits;
+    needs ``seq_len``), 'sharded' (per-chip view of the SPMD tick over
+    ``model_shards`` x ``data_shards``; the combine op group comes from the
+    same ``emit_combine`` the in-mesh ``combine_partials`` hook uses), or
+    'engine' (the bare sampling engine over pre-materialized (B, L, V)
+    logits, no head — the paper's Table 4 cross-validation block).
+    """
+    import functools
+
+    import jax
+
+    from repro.core import sampling as sampling_lib
+
+    if head_path not in ("fused", "unfused", "legacy", "sharded", "engine"):
+        raise ValueError(f"unknown head_path {head_path!r}")
+    if head_path == "legacy" and seq_len is None:
+        raise ValueError("head_path='legacy' needs seq_len (the full-"
+                         "sequence rows the pre-fusion head materializes)")
+
+    cfg = sampling_lib.SamplingConfig(fmt=fmt, temperature=temperature)
+    tracer = Tracer(meta={
+        "kind": "sampling", "B": B, "L": L, "V": V, "d": d, "fmt": fmt,
+        "head_path": head_path, "chunk_v": chunk_v,
+        "model_shards": model_shards, "data_shards": data_shards,
+        "seq_len": seq_len, "temperature": temperature})
+    sds = jax.ShapeDtypeStruct
+    rng = jax.random.PRNGKey(0) if temperature > 0.0 else None
+
+    if head_path == "sharded":
+        # per-chip view: real shard math (pad_head_for_mesh) for the local
+        # head width, real streamed partials, shared combine emission, real
+        # transfer-selection tail — matches what each chip in the
+        # shard_mapped tick executes (per-chip trace, like
+        # sim/analytical.sharded_fused_head_sampling_stage).
+        B_loc = -(-B // data_shards)
+        w_pad = jax.eval_shape(
+            functools.partial(sampling_lib.pad_head_for_mesh,
+                              n_shards=model_shards), sds((d, V), "float32"))
+        vloc = w_pad.shape[-1] // model_shards
+        R_loc = B_loc * L
+        with activate(tracer):
+            jax.eval_shape(
+                functools.partial(
+                    sampling_lib.fused_head_local_partials, fmt=fmt,
+                    logit_scale=logit_scale, col_offset=0,
+                    suppress_id=mask_id, chunk_v=chunk_v, col_limit=V),
+                sds((R_loc, d), "bfloat16"), sds((d, vloc), "float32"))
+            emit_combine(R_loc)
+            emit("S_ST", (2 * R_loc,), stage="tail", note="conf_idx_wb")
+            jax.eval_shape(
+                lambda conf, x0, xx, m_idx, kk:
+                sampling_lib._select_and_commit(conf, x0, xx, m_idx, kk,
+                                                cfg, None),
+                sds((B_loc, L), "float32"), sds((B_loc, L), "int32"),
+                sds((B_loc, L), "int32"), sds((B_loc, L), "bool"),
+                sds((B_loc,), "int32"))
+        return tracer.finish()
+
+    x = sds((B, L), "int32")
+    k = sds((B,), "int32")
+    with activate(tracer):
+        if head_path == "fused":
+            jax.eval_shape(
+                lambda h, w, xx, kk: sampling_lib.fused_sampling_step_full(
+                    h, w, xx, mask_id, kk, cfg, rng,
+                    logit_scale=logit_scale, chunk_v=chunk_v,
+                    use_kernel=False),
+                sds((B, L, d), "bfloat16"), sds((d, V), "float32"), x, k)
+        elif head_path == "unfused":
+            def unfused(h, w, xx, kk):
+                logits = sampling_lib.head_logits(h, w,
+                                                  logit_scale=logit_scale)
+                return sampling_lib.sampling_step_full(
+                    logits, xx, mask_id, kk, cfg, rng)
+            jax.eval_shape(unfused, sds((B, L, d), "bfloat16"),
+                           sds((d, V), "float32"), x, k)
+        else:   # legacy / engine: logits pre-materialized by the forward
+            if head_path == "legacy":
+                emit_legacy_head(B * seq_len, d, V)
+            jax.eval_shape(
+                lambda lg, xx, kk: sampling_lib.sampling_step_full(
+                    lg, xx, mask_id, kk, cfg, rng),
+                sds((B, L, V), "bfloat16"), x, k)
+    return tracer.finish()
+
+
+def capture_tick_trace(model, dcfg, mask_id: Optional[int] = None, *,
+                       B: int, s_tot: int, mesh=None, quant=None) -> Trace:
+    """Record one full serving-tick op stream (forward marker + sampling)
+    from the real ``core.diffusion.batched_tick`` — or, with ``mesh``, the
+    shard_mapped SPMD tick — via ``jax.eval_shape``.  Parameters are
+    shape-only (``jax.eval_shape(model.init, ...)``), so this works at
+    full LLaDA-8B scale without allocating a single weight."""
+    import functools
+
+    import jax
+
+    from repro.core import diffusion
+
+    mask_id = model.cfg.mask_id if mask_id is None else mask_id
+    sds = jax.ShapeDtypeStruct
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache = None
+    if dcfg.cache_mode != "none":
+        cache = jax.eval_shape(lambda: model.init_cache(B, s_tot))
+    x = sds((B, s_tot), "int32")
+    kv_valid = sds((B, s_tot), "bool")
+    block_start = sds((B,), "int32")
+    k = sds((B,), "int32")
+    srng = jax.random.PRNGKey(0)
+    tracer = Tracer(meta={
+        "kind": "tick", "B": B, "s_tot": s_tot, "L": dcfg.block_length,
+        "V": int(model.cfg.vocab), "d": int(model.cfg.d_model),
+        "head_path": dcfg.head_path, "cache_mode": dcfg.cache_mode,
+        "fmt": dcfg.sampling.fmt,
+        "mesh": dict(mesh.shape) if mesh is not None else None})
+
+    if mesh is None:
+        jax.eval_shape(
+            functools.partial(diffusion.batched_tick, model, dcfg=dcfg,
+                              mask_id=mask_id, quant=quant, tracer=tracer),
+            params, x, kv_valid, block_start, k, srng, cache)
+    else:
+        # bypass the lru_cache (a tracer must never become a cache key)
+        tick = diffusion.get_spmd_tick_fn.__wrapped__(
+            model, dcfg, mask_id, mesh, jit_steps=False, quant=quant)
+        with activate(tracer):
+            jax.eval_shape(tick, params, x, kv_valid, block_start, k, srng,
+                           cache)
+    return tracer.finish()

@@ -1,0 +1,110 @@
+"""benchmarks/check_bench.py gate: passes on good payloads, exits nonzero
+on regressions, warns (not fails) on unknown benchmark names."""
+import json
+import os
+
+import pytest
+
+from benchmarks import check_bench
+
+GOOD_FUSED = {
+    "benchmark": "fused_head",
+    "measured": {"greedy_token_parity": True, "speedup": 1.2},
+    "modeled_llada8b_tick": {"ratio_vs_sliced": 6.3,
+                             "ratio_vs_legacy": 61.0},
+}
+
+GOOD_CYCLE = {
+    "benchmark": "cycle_sim",
+    "crossval": {
+        **{p: {"ratio_vs_analytical": 1.0, "band": [0.5, 1.5],
+               "within_band": True}
+           for p in ("fused", "unfused", "legacy", "sharded", "engine")},
+        "all_within_band": True},
+    "tick_capture": {"fused_matches_standalone": True,
+                     "sharded_matches_standalone": None},
+    "modeled_a6000": {c: {"speedup_vs_a6000": 5.0, "paper_dart_x": 2.64,
+                          "sampling_frac": 0.05} for c in ("dual", "none")},
+}
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def test_pass_on_good_payloads(tmp_path, capsys):
+    files = [_write(tmp_path, "BENCH_fused_head.json", GOOD_FUSED),
+             _write(tmp_path, "BENCH_cycle_sim.json", GOOD_CYCLE)]
+    assert check_bench.main(files) == 0
+    out = capsys.readouterr().out
+    assert "all checks passed" in out
+    assert "crossval_fused" in out
+
+
+def test_fail_on_parity_regression(tmp_path, capsys):
+    bad = json.loads(json.dumps(GOOD_FUSED))
+    bad["measured"]["greedy_token_parity"] = False
+    assert check_bench.main(
+        [_write(tmp_path, "BENCH_fused_head.json", bad)]) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_fail_on_band_violation(tmp_path):
+    bad = json.loads(json.dumps(GOOD_CYCLE))
+    bad["crossval"]["fused"]["within_band"] = False
+    bad["crossval"]["all_within_band"] = False
+    assert check_bench.main(
+        [_write(tmp_path, "BENCH_cycle_sim.json", bad)]) == 1
+
+
+def test_fail_on_speedup_floor(tmp_path):
+    bad = json.loads(json.dumps(GOOD_CYCLE))
+    bad["modeled_a6000"]["dual"]["speedup_vs_a6000"] = 1.2
+    assert check_bench.main(
+        [_write(tmp_path, "BENCH_cycle_sim.json", bad)]) == 1
+
+
+def test_sharded_capture_skip_is_not_failure(tmp_path):
+    ok = json.loads(json.dumps(GOOD_CYCLE))
+    ok["tick_capture"]["sharded_matches_standalone"] = None
+    assert check_bench.main(
+        [_write(tmp_path, "BENCH_cycle_sim.json", ok)]) == 0
+    bad = json.loads(json.dumps(GOOD_CYCLE))
+    bad["tick_capture"]["sharded_matches_standalone"] = False
+    assert check_bench.main(
+        [_write(tmp_path, "BENCH_cycle_sim.json", bad)]) == 1
+
+
+def test_malformed_payload_is_labeled_fail_not_crash(tmp_path, capsys):
+    p = tmp_path / "BENCH_stale.json"
+    p.write_text('{"benchmark": "cycle_sim"')          # truncated json
+    q = tmp_path / "BENCH_drift.json"
+    q.write_text(json.dumps({"benchmark": "fused_head"}))  # missing keys
+    good = _write(tmp_path, "BENCH_fused_head.json", GOOD_FUSED)
+    assert check_bench.main([str(p), str(q), good]) == 1
+    out = capsys.readouterr().out
+    assert out.count("unreadable/stale payload") == 2
+    assert "greedy_token_parity" in out       # later files still validated
+
+
+def test_unknown_benchmark_warns_not_fails(tmp_path, capsys):
+    assert check_bench.main(
+        [_write(tmp_path, "BENCH_new.json", {"benchmark": "new"})]) == 0
+    assert "WARN" in capsys.readouterr().out
+
+
+def test_no_files_is_an_error(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    assert check_bench.main([]) == 2
+
+
+def test_gate_passes_on_freshly_emitted_real_jsons():
+    """If the repo-level smoke benchmarks have produced BENCH files, the
+    real gate must accept them (covers schema drift)."""
+    files = [f for f in ("BENCH_fused_head.json", "BENCH_cycle_sim.json",
+                         "BENCH_sharded_tick.json") if os.path.exists(f)]
+    if not files:
+        pytest.skip("no emitted BENCH_*.json in cwd")
+    assert check_bench.main(files) == 0
