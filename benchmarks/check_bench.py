@@ -75,10 +75,45 @@ def _check_cycle_sim(b: dict) -> List[Check]:
     return out
 
 
+def _check_serve_stream(b: dict) -> List[Check]:
+    p, ld = b["parity"], b["load"]
+    one, two = ld["one_replica"], ld["two_replicas"]
+    return [
+        ("stream_matches_generate", p["stream_matches_generate"],
+         p["stream_matches_generate"] is True),
+        ("stream_matches_offline", p["stream_matches_offline"],
+         p["stream_matches_offline"] is True),
+        ("ticks_monotone",
+         (p["ticks_monotone"], one["ticks_monotone"],
+          two["ticks_monotone"]),
+         p["ticks_monotone"] and one["ticks_monotone"]
+         and two["ticks_monotone"]),
+        # replica scaling under device-paced ticks (see the benchmark's
+        # module doc); the unpaced host-bound ratio is informational
+        ("goodput_ratio_2x", f"{ld['goodput_ratio_2x']:.2f}x",
+         ld["goodput_ratio_2x"] >= 1.5),
+        ("goodput_ratio_2x_unpaced",
+         f"{ld['unpaced']['goodput_ratio_2x']:.2f}x "
+         f"({ld['host_cpus']} host cpus)", None),
+        # shed-rate sanity at saturating offered load: the single replica
+        # must actually shed, both rates must be valid fractions, and the
+        # doubled capacity must not shed more
+        ("shed_rate_1r", f"{one['shed_rate']:.2f}",
+         0.0 < one["shed_rate"] < 1.0),
+        ("shed_rate_2r", f"{two['shed_rate']:.2f}",
+         0.0 <= two["shed_rate"] <= one["shed_rate"]),
+        ("http_errors", one["errors"] + two["errors"],
+         one["errors"] + two["errors"] == 0),
+        ("completed_1r_2r", f"{one['completed']}/{two['completed']}",
+         one["completed"] > 0 and two["completed"] > one["completed"]),
+    ]
+
+
 CHECKS: Dict[str, Callable[[dict], List[Check]]] = {
     "fused_head": _check_fused_head,
     "sharded_tick": _check_sharded_tick,
     "cycle_sim": _check_cycle_sim,
+    "serve_stream": _check_serve_stream,
 }
 
 

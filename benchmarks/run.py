@@ -19,6 +19,10 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   cycle_sim            trace-driven cycle-level NPU sampling simulator:
                        analytical crossval bands + real-tick trace parity
                        + modeled A6000 speedup (emits BENCH_cycle_sim.json)
+  serve_stream         online streaming frontend under saturating Poisson
+                       load through the real HTTP+SSE surface: goodput /
+                       TTFT / shed rate, 1 vs 2 replicas + stream parity
+                       (emits BENCH_serve_stream.json)
 
 ``check_bench`` (not listed: it is the CI gate, not a benchmark) validates
 every emitted BENCH_*.json afterwards.
@@ -47,7 +51,7 @@ MODULES = [
     "fig1_breakdown", "fig7_sampling_sweeps", "table2_hbm",
     "table3_pipeline", "table4_crossval", "table5_quant",
     "table6_end2end", "fig9_dse", "roofline_report", "serve_engine",
-    "fused_head", "sharded_tick", "cycle_sim",
+    "fused_head", "sharded_tick", "cycle_sim", "serve_stream",
 ]
 
 

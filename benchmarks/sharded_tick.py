@@ -90,7 +90,7 @@ def _measured(rows: list) -> dict:
         sampling=sampling_lib.SamplingConfig(),
         baos=BAOSConfig(enabled=False))
     rs = np.random.RandomState(SEED)
-    reqs = [Request(uid=i,
+    reqs = [Request(uid=1 + i,
                     prompt=rs.randint(0, cfg.vocab - 2,
                                       size=(12,)).astype(np.int32),
                     gen_length=2 * BLOCK_LEN) for i in range(N_REQUESTS)]

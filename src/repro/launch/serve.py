@@ -1,5 +1,6 @@
-"""Serving driver: continuous-batching dLLM engine (default) or the legacy
-one-batch-at-a-time loop (``--legacy``).
+"""Serving driver: continuous-batching dLLM engine (default), the legacy
+one-batch-at-a-time loop (``--legacy``), or the online streaming HTTP
+frontend (``--http PORT``).
 
 Engine path: packs requests into padded batch slots over a preallocated KV
 slot pool and advances all of them with one fused forward + Stable-Max
@@ -8,6 +9,13 @@ request latency, and the per-stage breakdown with ``--breakdown``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --batch 4 --prompt-len 32 --gen-len 64 --block-len 16 --steps 8
+
+HTTP path (docs/streaming_serving.md): boots ``--replicas`` independent
+engines behind the least-loaded/round-robin router and serves the
+OpenAI-style streaming API until interrupted (Ctrl-C drains gracefully):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+      --http 8080 --replicas 2 --slots 4 --max-seq-len 128 --mode none
 """
 from __future__ import annotations
 
@@ -61,6 +69,24 @@ def build_parser() -> argparse.ArgumentParser:
                     help="vary request prompt/gen lengths across the trace")
     ap.add_argument("--breakdown", action="store_true",
                     help="time forward vs sampling stages per tick (Fig. 1)")
+    # online streaming frontend (docs/streaming_serving.md)
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve the streaming HTTP API on this port "
+                         "(0 = ephemeral) instead of an offline trace")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="independent engine replicas behind the router")
+    ap.add_argument("--route", default="least_loaded",
+                    choices=["rr", "least_loaded"])
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="per-replica queued-request bound beyond free "
+                         "slots (default: 2x slots); excess gets 429")
+    ap.add_argument("--max-queue-wait", type=float, default=None,
+                    help="shed queued requests waiting longer than this "
+                         "many seconds")
+    ap.add_argument("--max-seq-len", type=int, default=0,
+                    help="engine canvas length for --http "
+                         "(default: prompt-len + gen-len)")
     return ap
 
 
@@ -123,7 +149,7 @@ def make_requests(args, cfg, seed: int) -> list:
     rs = np.random.RandomState(seed)
     n = args.requests * args.batch
     reqs = []
-    for uid in range(n):
+    for uid in range(1, n + 1):           # engine uids must be positive
         if args.mixed:
             p_len = int(rs.randint(max(4, args.prompt_len // 2),
                                    args.prompt_len + 1))
@@ -163,6 +189,32 @@ def run_engine(args, cfg, model, params, dcfg, mesh=None) -> None:
     print(eng.metrics.format_summary())
 
 
+def run_http(args, cfg, model, params, dcfg, mesh=None) -> None:
+    """Boot the online streaming frontend and serve until interrupted."""
+    import asyncio
+
+    from repro.serving.frontend import build_frontend, serve_forever
+
+    policy = (get_policy("slowfast", threshold=args.slowfast_threshold)
+              if args.policy == "slowfast" else get_policy(args.policy))
+    max_seq = args.max_seq_len or (args.prompt_len + args.gen_len)
+    frontend = build_frontend(
+        model, params, dcfg, model_name=args.arch,
+        replicas=args.replicas, num_slots=args.slots or args.batch,
+        max_seq_len=max_seq, mode=args.mode, strategy=args.route,
+        max_queue=args.max_queue, max_queue_wait=args.max_queue_wait,
+        policy=policy, mesh=mesh, host=args.host, port=args.http,
+        seed=args.seed)
+    try:
+        asyncio.run(serve_forever(frontend))
+    except KeyboardInterrupt:
+        pass
+    finally:
+        for w in frontend.router.workers:
+            print(f"--- {w.name} ---")
+            print(w.engine.metrics.format_summary())
+
+
 def make_mesh_arg(spec: str):
     """'--mesh D,M' -> a (data, model) debug mesh (CPU: force host devices
     via XLA_FLAGS=--xla_force_host_platform_device_count=N first)."""
@@ -188,9 +240,14 @@ def main(argv=None):
     dcfg = make_dcfg(args)
     mesh = make_mesh_arg(args.mesh) if args.mesh else None
     if args.legacy:
+        if args.http is not None:
+            raise SystemExit("--legacy and --http are mutually exclusive "
+                             "(the legacy loop has no online frontend)")
         if mesh is not None and args.cache != "none":
             raise SystemExit("--mesh --legacy requires --cache none")
         run_legacy(args, cfg, model, params, dcfg, mesh=mesh)
+    elif args.http is not None:
+        run_http(args, cfg, model, params, dcfg, mesh=mesh)
     else:
         run_engine(args, cfg, model, params, dcfg, mesh=mesh)
 

@@ -3,17 +3,21 @@
 Packs live requests into fixed padded batch slots backed by a preallocated
 KV slot pool and advances every active slot with a single fused
 forward + Stable-Max sampling call per engine tick (core/diffusion
-``batched_tick``).  See docs/serving.md for the architecture.
+``batched_tick``).  See docs/serving.md for the architecture; the online
+HTTP/SSE layer on top lives in ``repro.serving.frontend``
+(docs/streaming_serving.md).
 """
 from repro.serving.cache_pool import CachePool
-from repro.serving.engine import CompletedRequest, Request, ServingEngine
+from repro.serving.engine import (CommitEvent, CompletedRequest, Request,
+                                  ServingEngine)
 from repro.serving.metrics import MetricsTracker
 from repro.serving.scheduler import (FIFOPolicy, Policy,
                                      ShortestGenFirstPolicy, SlowFastPolicy,
-                                     get_policy)
+                                     expired_requests, get_policy)
 
 __all__ = [
-    "CachePool", "CompletedRequest", "Request", "ServingEngine",
-    "MetricsTracker", "Policy", "FIFOPolicy", "ShortestGenFirstPolicy",
-    "SlowFastPolicy", "get_policy",
+    "CachePool", "CommitEvent", "CompletedRequest", "Request",
+    "ServingEngine", "MetricsTracker", "Policy", "FIFOPolicy",
+    "ShortestGenFirstPolicy", "SlowFastPolicy", "expired_requests",
+    "get_policy",
 ]

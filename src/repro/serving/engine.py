@@ -29,12 +29,22 @@ and the per-chip Stable-Max partials merge with one pmax/psum/pmin.  The
 head param is resharded (and MX-block-pad-aligned) once at construction.
 Call :meth:`warmup` before timed runs so jit compilation never pollutes the
 virtual clock.
+
+Online serving (docs/streaming_serving.md) layers on two hooks here:
+``submit(request, on_commit=cb)`` registers a per-request commit callback —
+every tick the engine diffs the request's row against its host-tracked mask
+state and hands the callback a :class:`CommitEvent` with the positions and
+tokens that committed on that tick (dLLM tokens commit *out of order*
+within a block, so this is the streaming-native unit, not a suffix append).
+The diff reuses the one post-tick host copy of ``x`` that request release
+already needs, so streaming adds no extra device syncs.  ``cancel(uid)``
+removes a still-queued request (the frontend's shed path).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +90,27 @@ class CompletedRequest:
 
 
 @dataclasses.dataclass
+class CommitEvent:
+    """Per-tick commit delta for one request (streaming unit).
+
+    ``positions`` are absolute indices into the request's row (prompt at
+    [0, prompt_len)); within a block they are generally *not* contiguous or
+    left-to-right — dLLM commits are confidence-ordered.  ``done`` events
+    additionally carry the full final row in ``final_tokens``.
+    """
+    uid: int
+    tick: int                     # engine tick counter (monotone)
+    now: float                    # engine virtual clock at commit
+    block_idx: int
+    step_in_block: int
+    positions: np.ndarray         # (k,) int — committed this tick
+    tokens: np.ndarray            # (k,) int32
+    masks_left: int               # masks left in the active block after tick
+    done: bool = False
+    final_tokens: Optional[np.ndarray] = None   # (P + gen,) when done
+
+
+@dataclasses.dataclass
 class _Slot:
     """Host-side per-slot resume state (the scalar half of DiffusionState;
     the array half lives batched in the engine's canvas/pool rows)."""
@@ -90,6 +121,10 @@ class _Slot:
     ticks: int = 0
     last_conf: float = float("-inf")
     block_masks_left: int = 0
+    first_commit: bool = False
+    # host mirror of still-masked positions, kept only for requests with a
+    # commit callback (the per-tick streaming diff)
+    masked: Optional[np.ndarray] = None
 
 
 class ServingEngine:
@@ -156,6 +191,8 @@ class ServingEngine:
         self.completed: List[CompletedRequest] = []
         self.metrics = MetricsTracker(num_slots)
         self.now = 0.0                      # virtual clock (seconds)
+        self.ticks_total = 0
+        self._commit_cbs: Dict[int, Callable[[CommitEvent], None]] = {}
 
         L, T = dcfg.block_length, dcfg.steps_per_block
         self._ksched = np.asarray(
@@ -190,7 +227,20 @@ class ServingEngine:
 
     # -- request lifecycle --------------------------------------------------
 
-    def submit(self, request: Request) -> None:
+    def submit(self, request: Request,
+               on_commit: Optional[Callable[[CommitEvent], None]] = None
+               ) -> None:
+        """Queue a request; ``on_commit`` (if given) receives a CommitEvent
+        after every tick that touches it, including the final done event."""
+        uid = request.uid
+        if not isinstance(uid, (int, np.integer)) or uid <= 0:
+            raise ValueError(f"request uid must be a positive int, "
+                             f"got {uid!r}")
+        if uid in self.metrics.seen_uids:
+            # a duplicate would silently overwrite the slot_of_uid and
+            # metrics entries of the live/finished request with this uid
+            # (seen_uids survives metrics compaction: uids never recycle)
+            raise ValueError(f"duplicate request uid {uid}")
         L = self.dcfg.block_length
         if request.gen_length <= 0 or request.gen_length % L:
             raise ValueError(
@@ -201,8 +251,22 @@ class ServingEngine:
                 f"request length {request.total_len} exceeds engine "
                 f"max_seq_len {self.max_seq_len}")
         self.queue.append(request)
+        if on_commit is not None:
+            self._commit_cbs[int(uid)] = on_commit
         self.metrics.request_arrived(request.uid, request.arrival_time,
                                      request.gen_length)
+
+    def cancel(self, uid: int) -> bool:
+        """Remove a still-*queued* request (the frontend's max_queue_wait
+        shed path).  Returns False when the uid is unknown or already
+        admitted to a slot — admitted work is never interrupted."""
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                del self.queue[i]
+                self._commit_cbs.pop(uid, None)
+                self.metrics.request_shed(uid, self.now)
+                return True
+        return False
 
     def _admit(self) -> None:
         while self.pool.free_slots:
@@ -215,6 +279,10 @@ class ServingEngine:
             self.slots[slot] = _Slot(
                 request=pick, admitted_time=self.now,
                 block_masks_left=self.dcfg.block_length)
+            if pick.uid in self._commit_cbs:
+                m = np.zeros((pick.total_len,), bool)
+                m[pick.prompt_len:] = True
+                self.slots[slot].masked = m
             self.slot_of_uid[pick.uid] = slot
             row = np.full((self.max_seq_len,), self.mask_id, np.int32)
             row[:pick.prompt_len] = np.asarray(pick.prompt, np.int32)
@@ -341,25 +409,62 @@ class ServingEngine:
 
         n_active = self.active_slots
         self.now += dt
+        self.ticks_total += 1
         self.metrics.record_tick(dt, n_active)
         x_host: Optional[np.ndarray] = None
         for i, s in enumerate(self.slots):
             if s is None:
                 continue
             s.ticks += 1
-            if int(masks_np[i]) == 0:         # block fully committed
+            uid = s.request.uid
+            cb = self._commit_cbs.get(uid)
+            masks_left = int(masks_np[i])
+            # host copy only when someone will read it: a streaming diff,
+            # or a request completing this tick (release needs the row);
+            # intermediate block boundaries without callbacks stay on
+            # device, matching the pre-streaming sync behavior
+            if x_host is None and (cb is not None or (
+                    masks_left == 0
+                    and (s.block_idx + 1) * L >= s.request.gen_length)):
+                x_host = np.asarray(self.x)   # one host copy serves all rows
+            positions = tokens = None
+            if cb is not None:
+                # streaming diff: what unmasked on this tick, against the
+                # host-tracked mask mirror (no extra device sync — x_host
+                # is the copy the release path fetches anyway)
+                row = x_host[i, :s.request.total_len]
+                newly = s.masked & (row != self.mask_id)
+                positions = np.nonzero(newly)[0]
+                tokens = row[positions].copy()
+                s.masked &= ~newly
+            if not s.first_commit and masks_left < L:
+                s.first_commit = True
+                self.metrics.request_first_commit(uid, self.now)
+            block_idx, step_in_block = s.block_idx, s.step_in_block
+            done = False
+            final: Optional[np.ndarray] = None
+            if masks_left == 0:               # block fully committed
                 s.block_idx += 1
                 s.step_in_block = 0
                 s.last_conf = float("-inf")
                 s.block_masks_left = L
                 if s.block_idx * L >= s.request.gen_length:
-                    if x_host is None:
-                        x_host = np.asarray(self.x)
+                    done = True
+                    if cb is not None:
+                        final = x_host[i, :s.request.total_len].copy()
                     self._release(i, x_host[i])
             else:
                 s.step_in_block += 1
                 s.last_conf = float(conf_np[i])
-                s.block_masks_left = int(masks_np[i])
+                s.block_masks_left = masks_left
+            if cb is not None:
+                cb(CommitEvent(
+                    uid=uid, tick=self.ticks_total, now=self.now,
+                    block_idx=block_idx, step_in_block=step_in_block,
+                    positions=positions, tokens=tokens,
+                    masks_left=masks_left, done=done, final_tokens=final))
+                if done:
+                    del self._commit_cbs[uid]
         return True
 
     def run(self, requests: Optional[Sequence[Request]] = None

@@ -1,0 +1,285 @@
+"""Async load generator for the streaming frontend (real HTTP surface).
+
+Drives ``POST /v1/completions`` with Poisson arrivals (or a replayed
+trace), one connection per request, parsing the SSE stream exactly like a
+real client: TTFT is the wall time to the first ``block_committed`` event,
+latency to the ``done`` event, and 429/``overloaded`` answers count as
+shed.  Emits the aggregate report benchmarks/serve_stream.py turns into
+``BENCH_serve_stream.json``.
+
+    PYTHONPATH=src python -m repro.serving.frontend.loadgen \
+        --url http://127.0.0.1:8080 --rate 50 --requests 32 --max-tokens 16
+
+Trace replay (``--trace trace.json``) expects a JSON list of
+``{"at": seconds, "prompt_len": int, "max_tokens": int}`` rows.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import time
+import urllib.parse
+from typing import List, Optional
+
+import numpy as np
+
+
+_READ_LIMIT = 8 << 20   # SSE `done` lines carry full token_ids + text:
+                        # far above asyncio's 64 KiB default line limit
+
+
+async def _open(url: str):
+    u = urllib.parse.urlsplit(url)
+    return await asyncio.open_connection(u.hostname, u.port,
+                                         limit=_READ_LIMIT)
+
+
+async def _read_headers(reader) -> int:
+    """Consume the status line + headers, return the HTTP status."""
+    status_line = await reader.readline()
+    parts = status_line.split()
+    if len(parts) < 2:
+        raise ConnectionError(f"bad status line {status_line!r}")
+    status = int(parts[1])
+    while True:
+        line = await reader.readline()
+        if line in (b"\r\n", b"\n", b""):
+            return status
+
+
+async def get_json(url: str, path: str) -> dict:
+    reader, writer = await _open(url)
+    host = urllib.parse.urlsplit(url).netloc
+    writer.write((f"GET {path} HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Connection: close\r\n\r\n").encode())
+    await writer.drain()
+    status = await _read_headers(reader)
+    body = await reader.read()
+    writer.close()
+    if status != 200:
+        raise RuntimeError(f"GET {path} -> {status}: {body[:200]!r}")
+    return json.loads(body)
+
+
+async def complete(url: str, prompt_ids: List[int], max_tokens: int,
+                   stream: bool = True, timeout: float = 120.0) -> dict:
+    """One completion request -> a per-request result row.
+
+    Row fields: status ("ok" | "shed" | "error"), ttft_s, latency_s,
+    completion_tokens, text, token_ids, ticks (event tick numbers, for
+    the monotone-ordering assertion), ticks_monotone, positions (all
+    streamed commit positions, in arrival order).
+
+    ``timeout`` bounds the whole request wall time: TCP accepts raced
+    against a server shutdown can die silently in the closed listener's
+    backlog, and a client without a deadline would wait on them forever.
+    """
+    try:
+        return await asyncio.wait_for(
+            _complete_inner(url, prompt_ids, max_tokens, stream), timeout)
+    except asyncio.TimeoutError:
+        return {"status": "error",
+                "error": f"client timeout after {timeout}s"}
+
+
+async def _complete_inner(url: str, prompt_ids: List[int],
+                          max_tokens: int, stream: bool) -> dict:
+    t_sub = time.perf_counter()
+    reader, writer = await _open(url)
+    body = json.dumps({"prompt": [int(t) for t in prompt_ids],
+                       "max_tokens": int(max_tokens),
+                       "stream": bool(stream)}).encode()
+    host = urllib.parse.urlsplit(url).netloc
+    writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Content-Type: application/json\r\n"
+                  f"Content-Length: {len(body)}\r\n"
+                  f"Connection: close\r\n\r\n").encode() + body)
+    await writer.drain()
+    try:
+        status = await _read_headers(reader)
+        if status == 429:
+            await reader.read()
+            return {"status": "shed", "http": 429}
+        if status != 200:
+            payload = await reader.read()
+            return {"status": "error", "http": status,
+                    "body": payload[:200].decode("utf-8", "replace")}
+        if not stream:
+            payload = json.loads(await reader.read())
+            return {"status": "ok", "ttft_s": payload.get("ttft_s"),
+                    "latency_s": time.perf_counter() - t_sub,
+                    "completion_tokens":
+                        payload["usage"]["completion_tokens"],
+                    "text": payload["choices"][0]["text"],
+                    "token_ids": payload["choices"][0]["token_ids"],
+                    "ticks": [], "ticks_monotone": True, "positions": []}
+        return await _consume_sse(reader, t_sub)
+    finally:
+        writer.close()
+
+
+async def _consume_sse(reader, t_sub: float) -> dict:
+    row = {"status": "error", "ttft_s": None, "latency_s": None,
+           "completion_tokens": 0, "text": None, "token_ids": None,
+           "ticks": [], "ticks_monotone": True, "positions": []}
+    event_name = None
+    async for raw in reader:
+        line = raw.decode("utf-8").rstrip("\n").rstrip("\r")
+        if line.startswith("event: "):
+            event_name = line[len("event: "):]
+            continue
+        if not line.startswith("data: "):
+            continue
+        data = line[len("data: "):]
+        if data == "[DONE]":
+            break
+        payload = json.loads(data)
+        if event_name == "block_committed":
+            if row["ttft_s"] is None:
+                row["ttft_s"] = time.perf_counter() - t_sub
+            if row["ticks"] and payload["tick"] <= row["ticks"][-1]:
+                row["ticks_monotone"] = False
+            row["ticks"].append(payload["tick"])
+            row["positions"].extend(payload["positions"])
+            row["completion_tokens"] += len(payload["tokens"])
+        elif event_name == "done":
+            row["status"] = "ok"
+            row["latency_s"] = time.perf_counter() - t_sub
+            row["text"] = payload["choices"][0]["text"]
+            row["token_ids"] = payload["choices"][0]["token_ids"]
+        elif event_name == "error":
+            row["status"] = ("shed" if payload["error"]["type"]
+                             == "overloaded" else "error")
+            row["error"] = payload["error"]
+    return row
+
+
+def _pctl(vals: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(vals), q)) if vals else 0.0
+
+
+async def run_load(url: str, *, rate: float = 50.0, n_requests: int = 32,
+                   prompt_len: int = 16, max_tokens: int = 16,
+                   seed: int = 0, stream: bool = True,
+                   trace: Optional[List[dict]] = None,
+                   window_s: Optional[float] = None) -> dict:
+    """Fire the workload and aggregate client-side percentiles.
+
+    Poisson mode draws exponential inter-arrivals at ``rate`` req/s;
+    trace mode replays explicit ``{"at", "prompt_len", "max_tokens"}``
+    rows.  Goodput counts only completed requests' generated tokens —
+    shed requests contribute zero.
+
+    ``window_s`` switches to a fixed-window open-loop measurement:
+    arrivals fill exactly [0, window_s), stragglers are awaited but only
+    requests that *finish* inside the window count toward goodput, and
+    the denominator is the window itself.  That removes the drain-tail
+    from the comparison, so configs of different capacity are measured
+    over identical saturated intervals (the 1 vs 2 replica benchmark
+    relies on this).  Without it, goodput is completed tokens over the
+    full wall time to the last event.
+    """
+    info = (await get_json(url, "/v1/models"))["data"][0]
+    vocab = int(info["vocab"])
+    rs = np.random.RandomState(seed)
+    if trace is not None:
+        arrivals = [float(t["at"]) for t in trace]
+        plens = [int(t["prompt_len"]) for t in trace]
+        gens = [int(t["max_tokens"]) for t in trace]
+    else:
+        if window_s is not None:
+            n_requests = max(1, int(np.ceil(rate * window_s * 1.2)))
+        arrivals = np.cumsum(
+            rs.exponential(1.0 / rate, size=n_requests)).tolist()
+        if window_s is not None:
+            arrivals = [a for a in arrivals if a < window_s] or [0.0]
+        plens = [prompt_len] * len(arrivals)
+        gens = [max_tokens] * len(arrivals)
+    n = len(arrivals)
+    prompts = [rs.randint(0, vocab - 2, size=(p,)).tolist() for p in plens]
+
+    t0 = time.perf_counter()
+
+    async def fire(i: int) -> dict:
+        delay = t0 + arrivals[i] - time.perf_counter()
+        if delay > 0:
+            await asyncio.sleep(delay)
+        try:
+            row = await complete(url, prompts[i], gens[i], stream=stream)
+        except (ConnectionError, OSError, asyncio.IncompleteReadError,
+                ValueError) as e:      # ValueError: line-limit overrun
+            row = {"status": "error", "error": repr(e)}
+        row["i"] = i
+        row["end_s"] = time.perf_counter() - t0
+        return row
+
+    rows = await asyncio.gather(*[fire(i) for i in range(n)])
+    duration = max((r["end_s"] for r in rows), default=0.0)
+    ok = [r for r in rows if r["status"] == "ok"]
+    shed = [r for r in rows if r["status"] == "shed"]
+    errors = [r for r in rows if r["status"] == "error"]
+    if window_s is not None:
+        good_tokens = sum(r["completion_tokens"] for r in ok
+                          if r["end_s"] <= window_s)
+        good_denom = window_s
+    else:
+        good_tokens = sum(r["completion_tokens"] for r in ok)
+        good_denom = duration
+    offered_rps = (n / arrivals[-1] if arrivals and arrivals[-1] > 0
+                   else float(rate))
+    return {
+        "n_requests": n,
+        "offered_rps": offered_rps,
+        "completed": len(ok),
+        "shed": len(shed),
+        "errors": len(errors),
+        "shed_rate": len(shed) / n if n else 0.0,
+        "duration_s": duration,
+        "window_s": window_s,
+        "good_tokens": good_tokens,
+        "goodput_tok_s": good_tokens / good_denom if good_denom > 0
+                         else 0.0,
+        "ttft_p50_s": _pctl([r["ttft_s"] for r in ok
+                             if r.get("ttft_s") is not None], 50),
+        "ttft_p99_s": _pctl([r["ttft_s"] for r in ok
+                             if r.get("ttft_s") is not None], 99),
+        "latency_p50_s": _pctl([r["latency_s"] for r in ok], 50),
+        "latency_p99_s": _pctl([r["latency_s"] for r in ok], 99),
+        "ticks_monotone": all(r.get("ticks_monotone", True) for r in ok),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--url", required=True,
+                    help="frontend base URL, e.g. http://127.0.0.1:8080")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="Poisson offered load, requests/s")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-stream", action="store_true",
+                    help="gathered JSON responses instead of SSE")
+    ap.add_argument("--trace", default=None,
+                    help="JSON trace file to replay instead of Poisson")
+    ap.add_argument("--window", type=float, default=None,
+                    help="fixed-window mode: offer load for this many "
+                         "seconds; goodput counts only in-window "
+                         "completions (see run_load)")
+    args = ap.parse_args(argv)
+    trace = None
+    if args.trace:
+        with open(args.trace) as f:
+            trace = json.load(f)
+    report = asyncio.run(run_load(
+        args.url, rate=args.rate, n_requests=args.requests,
+        prompt_len=args.prompt_len, max_tokens=args.max_tokens,
+        seed=args.seed, stream=not args.no_stream, trace=trace,
+        window_s=args.window))
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

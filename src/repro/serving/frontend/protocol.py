@@ -1,0 +1,163 @@
+"""Wire protocol for the streaming frontend (docs/streaming_serving.md).
+
+OpenAI-style ``/v1/completions`` JSON in, dLLM-native SSE events out.  The
+reproduction has no tokenizer, so "text" on the wire is the token-id
+string (space-joined ints) and prompts are token-id lists; the streaming
+unit is the per-tick commit *set* (``block_committed``), because dLLM
+tokens unmask confidence-ordered within a block, not left-to-right.
+
+SSE event schema (one ``event:``/``data:`` pair per engine tick):
+
+  block_committed  {uid, tick, block_idx, step_in_block,
+                    positions: [int], tokens: [int], masks_left}
+  done             {id, object, model, choices: [{text, token_ids, index,
+                    finish_reason}], usage, ticks, ttft_s, latency_s}
+  error            {error: {type, message}}   (e.g. type=overloaded on a
+                                               post-accept queue-wait shed)
+
+followed by the literal ``data: [DONE]`` terminator.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+class BadRequest(ValueError):
+    """Client error: malformed/unsatisfiable completion body (HTTP 400)."""
+
+
+def detok(tokens) -> str:
+    """Token ids -> wire text.  No tokenizer in the repro: the canonical
+    text form is the space-joined id string (bit-exact round-trip)."""
+    return " ".join(str(int(t)) for t in np.asarray(tokens).reshape(-1))
+
+
+def entok(text: str) -> np.ndarray:
+    """Wire text -> token ids (inverse of :func:`detok`)."""
+    parts = text.split()
+    try:
+        return np.array([int(p) for p in parts], np.int32)
+    except ValueError:
+        raise BadRequest(f"prompt string must be space-joined token ids, "
+                         f"got {text[:40]!r}")
+
+
+def parse_completion(body: dict, *, block_length: int, max_seq_len: int,
+                     vocab: int) -> Tuple[np.ndarray, int, bool]:
+    """Validate a ``/v1/completions`` body -> (prompt ids, gen_length,
+    stream).  Raises :class:`BadRequest` with a client-actionable message.
+    """
+    if not isinstance(body, dict):
+        raise BadRequest("body must be a JSON object")
+    prompt = body.get("prompt")
+    if isinstance(prompt, str):
+        ids = entok(prompt)
+    elif isinstance(prompt, (list, tuple)):
+        try:
+            ids = np.array([int(t) for t in prompt], np.int32)
+        except (TypeError, ValueError):
+            raise BadRequest("prompt list must contain only ints")
+    else:
+        raise BadRequest("prompt must be a token-id list or a space-joined "
+                         "id string")
+    if ids.size == 0:
+        raise BadRequest("prompt must be non-empty")
+    if int(ids.min()) < 0 or int(ids.max()) >= vocab:
+        raise BadRequest(f"prompt ids must be in [0, {vocab})")
+    max_tokens = body.get("max_tokens", block_length)
+    if not isinstance(max_tokens, int) or max_tokens <= 0 \
+            or max_tokens % block_length:
+        raise BadRequest(
+            f"max_tokens must be a positive multiple of the engine "
+            f"block_length ({block_length}); got {max_tokens!r}")
+    if ids.size + max_tokens > max_seq_len:
+        raise BadRequest(
+            f"prompt ({ids.size}) + max_tokens ({max_tokens}) exceeds the "
+            f"engine max_seq_len ({max_seq_len})")
+    stream = bool(body.get("stream", False))
+    return ids, max_tokens, stream
+
+
+# -- response payloads ------------------------------------------------------
+
+def commit_payload(ev) -> dict:
+    """CommitEvent -> ``block_committed`` JSON payload."""
+    return {
+        "uid": int(ev.uid),
+        "tick": int(ev.tick),
+        "block_idx": int(ev.block_idx),
+        "step_in_block": int(ev.step_in_block),
+        "positions": [int(p) for p in ev.positions],
+        "tokens": [int(t) for t in ev.tokens],
+        "masks_left": int(ev.masks_left),
+    }
+
+
+def completion_payload(uid: int, model: str, prompt_len: int,
+                       final_tokens: np.ndarray, ticks: int,
+                       ttft_s: Optional[float],
+                       latency_s: float) -> dict:
+    """Final (``done`` / non-streaming) OpenAI-style completion object."""
+    completion = np.asarray(final_tokens)[prompt_len:]
+    return {
+        "id": f"cmpl-{uid}",
+        "object": "text_completion",
+        "model": model,
+        "choices": [{
+            "index": 0,
+            "text": detok(completion),
+            "token_ids": [int(t) for t in completion],
+            "finish_reason": "stop",
+        }],
+        "usage": {
+            "prompt_tokens": int(prompt_len),
+            "completion_tokens": int(completion.size),
+            "total_tokens": int(prompt_len + completion.size),
+        },
+        "ticks": int(ticks),
+        "ttft_s": None if ttft_s is None else float(ttft_s),
+        "latency_s": float(latency_s),
+    }
+
+
+def error_payload(err_type: str, message: str) -> dict:
+    return {"error": {"type": err_type, "message": message}}
+
+
+# -- SSE / HTTP framing -----------------------------------------------------
+
+def sse_event(name: str, payload: dict) -> bytes:
+    return (f"event: {name}\ndata: {json.dumps(payload)}\n\n"
+            ).encode("utf-8")
+
+
+SSE_DONE = b"data: [DONE]\n\n"
+
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            405: "Method Not Allowed", 429: "Too Many Requests",
+            500: "Internal Server Error", 503: "Service Unavailable"}
+
+
+def http_response(status: int, body: bytes,
+                  content_type: str = "application/json") -> bytes:
+    head = (f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}\r\n"
+            f"Content-Type: {content_type}\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: close\r\n\r\n")
+    return head.encode("utf-8") + body
+
+
+def json_response(status: int, payload: dict) -> bytes:
+    return http_response(status, json.dumps(payload).encode("utf-8"))
+
+
+def sse_headers() -> bytes:
+    """Response head for a streaming reply; events follow unframed (the
+    connection closes after ``data: [DONE]``, so no chunked encoding)."""
+    return (b"HTTP/1.1 200 OK\r\n"
+            b"Content-Type: text/event-stream\r\n"
+            b"Cache-Control: no-cache\r\n"
+            b"Connection: close\r\n\r\n")

@@ -1,0 +1,334 @@
+"""Replica workers + multi-replica request router.
+
+Each :class:`EngineWorker` owns one :class:`~repro.serving.ServingEngine`
+and drives its tick loop on a dedicated thread — engine state is only ever
+touched from that thread.  The asyncio HTTP layer talks to workers through
+two thread-safe seams:
+
+  * ``submit()`` appends to a small staging deque under a lock (drained
+    into ``engine.submit()`` between ticks) and applies the admission
+    bound *synchronously*, so overload answers (429) never wait on a tick;
+  * commit/shed events flow back through the ``deliver`` callable the
+    caller provides (the server wraps ``loop.call_soon_threadsafe``).
+
+Because JAX releases the GIL during tick compute, N workers tick their
+engines genuinely concurrently — that is where the multi-replica goodput
+comes from (benchmarks/serve_stream.py measures ~1.8x at N=2 on CPU).
+
+Backpressure (docs/streaming_serving.md): a request is accepted iff
+
+    queued < max_queue + free_slots
+
+``queued`` counts staging + engine queue (never admitted work) and
+``free_slots`` is the worker's cache-pool occupancy snapshot — when slots
+are free the bound stretches so the pool can refill in one loop, when the
+pool is full the queue is hard-bounded at ``max_queue``.  Queued requests
+additionally shed once their wait exceeds ``max_queue_wait``.
+
+The :class:`Router` load-balances across workers: ``rr`` (rotating start)
+or ``least_loaded`` (min ``pending`` = queued + active), with failover to
+the next candidate when the preferred replica refuses, and graceful drain
+on shutdown (stop accepting, tick until empty, join).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.serving import scheduler as scheduler_lib
+from repro.serving.engine import CommitEvent, Request, ServingEngine
+
+
+class Overloaded(RuntimeError):
+    """Admission refused: bounded queue full or replica draining (HTTP 429
+    at the server; the router tries the next candidate first)."""
+
+
+@dataclasses.dataclass
+class ShedEvent:
+    """Terminal event for a request dropped *before* any commit."""
+    uid: int
+    reason: str
+
+
+class EngineWorker:
+    """One serving replica: an engine plus the thread that ticks it."""
+
+    def __init__(self, engine: ServingEngine, name: str = "replica-0",
+                 max_queue: Optional[int] = None,
+                 max_queue_wait: Optional[float] = None,
+                 tick_floor_s: Optional[float] = None):
+        self.engine = engine
+        self.name = name
+        self.max_queue = (2 * engine.num_slots if max_queue is None
+                          else max_queue)
+        if self.max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
+        self.max_queue_wait = max_queue_wait
+        # Optional device-paced tick emulation: sleep out the remainder of
+        # ``tick_floor_s`` after each tick's host work.  On a real
+        # accelerator the tick is device-bound and the host sits idle, so
+        # replica throughput scales with device count; on a small CI host
+        # the same experiment would otherwise be bound by host cores.  The
+        # sleep releases the GIL exactly like a device wait does, making
+        # the serving layer (admission, routing, streaming) the measured
+        # quantity.  None (default, production) = tick flat out.
+        self.tick_floor_s = tick_floor_s
+        self._lock = threading.Lock()
+        self._staging: List = []          # (Request, deliver) pairs
+        self._sinks: Dict[int, Callable] = {}   # uid -> deliver (shed path)
+        self._wake = threading.Event()
+        self._stop = False
+        self._abort = False
+        self._thread: Optional[threading.Thread] = None
+        self._epoch = time.perf_counter()
+        self.accepting = True
+        # load snapshots, refreshed every loop; racy reads are benign and
+        # at most one tick stale (the admission bound absorbs the skew)
+        self.free_slots = engine.pool.free_slots
+        self.queued = 0
+        self.active = 0
+        self.completed = 0
+        self.shed_count = 0
+
+    # -- thread-safe surface (called from the event loop) -------------------
+
+    @property
+    def load(self) -> int:
+        """Pending work: staged + queued + active (least-loaded key)."""
+        return self.queued + self.active
+
+    def now_rel(self) -> float:
+        """Seconds since worker epoch — the arrival clock requests are
+        stamped with (the engine's virtual clock tracks it via measured
+        tick durations + idle fast-forwards)."""
+        return time.perf_counter() - self._epoch
+
+    def submit(self, request: Request, deliver: Callable) -> None:
+        """Stage a request; raises :class:`Overloaded` when refused.
+        ``deliver`` must be thread-safe — it fires on the worker thread
+        with CommitEvent / ShedEvent objects."""
+        with self._lock:
+            if not self.accepting:
+                raise Overloaded(f"{self.name} is draining")
+            if self.queued >= self.max_queue + self.free_slots:
+                raise Overloaded(
+                    f"{self.name} queue full "
+                    f"({self.queued} >= {self.max_queue} + "
+                    f"{self.free_slots} free slots)")
+            request.arrival_time = self.now_rel()
+            self._staging.append((request, deliver))
+            self.queued += 1
+        self._wake.set()
+
+    def start(self) -> "EngineWorker":
+        self._thread = threading.Thread(
+            target=self._loop, name=f"engine-{self.name}", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop_accepting(self) -> None:
+        """Refuse new submissions (fast 429s) without stopping the tick
+        loop — phase one of graceful shutdown."""
+        with self._lock:
+            self.accepting = False
+
+    def shutdown(self, drain: bool = True) -> None:
+        """Stop accepting; ``drain=True`` finishes all admitted + queued
+        work first, ``drain=False`` sheds everything still pending."""
+        with self._lock:
+            self.accepting = False
+            self._stop = True
+            self._abort = self._abort or not drain
+        self._wake.set()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def stats(self) -> dict:
+        return {"name": self.name, "accepting": self.accepting,
+                "queued": self.queued, "active": self.active,
+                "free_slots": self.free_slots, "completed": self.completed,
+                "shed": self.shed_count, "max_queue": self.max_queue}
+
+    # -- worker thread ------------------------------------------------------
+
+    def _on_commit(self, deliver: Callable, ev: CommitEvent) -> None:
+        if ev.done:
+            self._sinks.pop(ev.uid, None)
+        deliver(ev)
+
+    def _shed_expired(self, eng: ServingEngine) -> None:
+        # only requests that genuinely *cannot* be admitted shed: with a
+        # free slot the next tick admits from the queue, so waiters there
+        # are one loop from service, not stuck
+        if self.max_queue_wait is None or not eng.queue \
+                or eng.pool.free_slots > 0:
+            return
+        now = self.now_rel()
+        for r in scheduler_lib.expired_requests(eng.queue, now,
+                                                self.max_queue_wait):
+            if eng.cancel(r.uid):
+                self.shed_count += 1
+                sink = self._sinks.pop(r.uid, None)
+                if sink is not None:
+                    sink(ShedEvent(uid=r.uid, reason=(
+                        f"queue wait {now - r.arrival_time:.3f}s exceeded "
+                        f"max_queue_wait {self.max_queue_wait:.3f}s")))
+
+    def _loop(self) -> None:
+        # a crashed worker must fail loudly, not strand clients: shed every
+        # live sink, refuse new work, and re-raise into the thread log
+        try:
+            self._loop_inner()
+        except BaseException:
+            with self._lock:
+                self.accepting = False
+                staged, self._staging = self._staging, []
+            for req, deliver in staged:
+                deliver(ShedEvent(uid=req.uid, reason="replica crashed"))
+            for uid, sink in list(self._sinks.items()):
+                sink(ShedEvent(uid=uid, reason="replica crashed"))
+            self._sinks.clear()
+            raise
+
+    def _loop_inner(self) -> None:
+        eng = self.engine
+        while True:
+            with self._lock:
+                staged, self._staging = self._staging, []
+            for req, deliver in staged:
+                try:
+                    eng.submit(req, on_commit=functools.partial(
+                        self._on_commit, deliver))
+                    self._sinks[req.uid] = deliver
+                except ValueError as e:
+                    # the server validates before staging; this is the
+                    # belt-and-braces path (e.g. duplicate uid)
+                    deliver(ShedEvent(uid=req.uid,
+                                      reason=f"rejected: {e}"))
+            self._shed_expired(eng)
+            if eng.pending:
+                # online serving runs on the wall clock: sync the engine's
+                # virtual `now` up to real time before the tick, or queued
+                # requests (stamped with real arrival times) would look
+                # like future arrivals to _admit() and starve the slots
+                eng.now = max(eng.now, self.now_rel())
+                t_tick = time.perf_counter()
+                progressed = eng.tick()
+                if progressed and self.tick_floor_s:
+                    rem = self.tick_floor_s - (time.perf_counter() - t_tick)
+                    if rem > 0:
+                        time.sleep(rem)       # emulated device wait
+            else:
+                progressed = False
+            with self._lock:
+                self.queued = len(eng.queue) + len(self._staging)
+            self.active = eng.active_slots
+            self.free_slots = eng.pool.free_slots
+            # results already reached clients through the commit callbacks;
+            # nothing reads eng.completed in server mode, so drain it (and
+            # periodically fold old metrics records into aggregates) or a
+            # long-lived replica grows per-request state without bound
+            if eng.completed:
+                self.completed += len(eng.completed)
+                eng.completed.clear()
+                eng.metrics.compact()
+            if self._stop:
+                if self._abort:
+                    # shed *everything* still pending, including requests
+                    # staged after this iteration's drain — anything left
+                    # in staging here would otherwise strand its client
+                    with self._lock:
+                        staged, self._staging = self._staging, []
+                    for req, deliver in staged:
+                        deliver(ShedEvent(uid=req.uid,
+                                          reason="server shutdown"))
+                    for uid in [r.uid for r in eng.queue]:
+                        eng.cancel(uid)
+                    for uid, sink in list(self._sinks.items()):
+                        sink(ShedEvent(uid=uid, reason="server shutdown"))
+                    self._sinks.clear()
+                    break
+                with self._lock:
+                    drained = not eng.pending and not self._staging
+                if drained:
+                    break
+            if not progressed and not staged:
+                with self._lock:
+                    idle = not self._staging and not self._stop
+                if idle:
+                    self._wake.wait(timeout=0.1)
+                self._wake.clear()
+        eng.metrics.elapsed = eng.now
+
+
+class Router:
+    """Load-balances submissions across replica workers."""
+
+    STRATEGIES = ("rr", "least_loaded")
+
+    def __init__(self, workers: Sequence[EngineWorker],
+                 strategy: str = "least_loaded"):
+        if strategy not in self.STRATEGIES:
+            raise ValueError(f"unknown routing strategy {strategy!r}; "
+                             f"choose from {list(self.STRATEGIES)}")
+        if not workers:
+            raise ValueError("router needs at least one worker")
+        self.workers = list(workers)
+        self.strategy = strategy
+        self._rr = 0
+
+    def candidates(self) -> List[EngineWorker]:
+        """Accepting workers in preference order for the next submit."""
+        live = [w for w in self.workers if w.accepting]
+        if not live:
+            raise Overloaded("no accepting replicas")
+        if self.strategy == "least_loaded":
+            order = {id(w): i for i, w in enumerate(self.workers)}
+            return sorted(live, key=lambda w: (w.load, order[id(w)]))
+        start = self._rr % len(live)
+        self._rr += 1
+        return live[start:] + live[:start]
+
+    def submit(self, request: Request, deliver: Callable) -> EngineWorker:
+        """Submit to the preferred replica, falling through the remaining
+        candidates when it refuses; raises Overloaded when all do."""
+        err: Optional[Overloaded] = None
+        for w in self.candidates():
+            try:
+                w.submit(request, deliver)
+                return w
+            except Overloaded as e:
+                err = e
+        raise err if err is not None else Overloaded("no accepting replicas")
+
+    @property
+    def load(self) -> int:
+        return sum(w.load for w in self.workers)
+
+    def start(self) -> "Router":
+        for w in self.workers:
+            w.start()
+        return self
+
+    def stop_accepting(self) -> None:
+        for w in self.workers:
+            w.stop_accepting()
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Graceful drain: every replica stops accepting, finishes (or
+        sheds, with ``drain=False``) its pending work, and joins."""
+        for w in self.workers:
+            w.shutdown(drain=drain)
+        for w in self.workers:
+            w.join(timeout)
+
+    def stats(self) -> dict:
+        return {"strategy": self.strategy, "load": self.load,
+                "replicas": [w.stats() for w in self.workers]}

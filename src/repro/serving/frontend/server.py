@@ -1,0 +1,328 @@
+"""Asyncio HTTP frontend for online dLLM serving (stdlib only).
+
+Endpoints:
+
+  POST /v1/completions   OpenAI-style completion.  ``"stream": true``
+                         answers Server-Sent Events with the dLLM-native
+                         ``block_committed`` / ``done`` schema
+                         (frontend/protocol.py) — positions within a block
+                         arrive confidence-ordered, not left-to-right.
+  GET  /v1/models        model + engine geometry (loadgen reads vocab,
+                         block_length, max_seq_len from here)
+  GET  /v1/stats         router + per-replica load/shed counters
+  GET  /healthz          liveness
+
+The server owns no engine state: requests go through the
+:class:`~repro.serving.frontend.router.Router` into per-replica worker
+threads, and events come back via ``loop.call_soon_threadsafe`` into a
+per-request asyncio queue.  Admission refusals (bounded queue, draining)
+answer HTTP 429 with an ``overloaded`` error body; requests shed *after*
+acceptance (max_queue_wait) get the same error as an SSE ``error`` event
+or a 429 JSON body.  See docs/streaming_serving.md.
+"""
+from __future__ import annotations
+
+import asyncio
+import itertools
+import json
+import time
+from typing import Optional, Set
+
+from repro.serving.engine import CommitEvent, Request
+from repro.serving.frontend import protocol
+from repro.serving.frontend.router import Overloaded, Router, ShedEvent
+
+_MAX_BODY = 8 << 20          # 8 MiB: far above any token-id prompt
+_HEAD_TIMEOUT_S = 30.0
+
+
+class ServeFrontend:
+    """HTTP server + router bundle.  Typical lifecycle::
+
+        frontend = ServeFrontend(router, model_name="llada-8b")
+        await frontend.start()          # workers + listener; port resolved
+        ...
+        await frontend.shutdown()       # graceful drain
+    """
+
+    def __init__(self, router: Router, *, model_name: str,
+                 host: str = "127.0.0.1", port: int = 0):
+        self.router = router
+        self.model_name = model_name
+        self.host = host
+        self.port = port                 # 0 -> ephemeral, resolved in start
+        eng = router.workers[0].engine
+        self.block_length = eng.dcfg.block_length
+        self.max_seq_len = min(w.engine.max_seq_len for w in router.workers)
+        self.vocab = int(eng.model.cfg.vocab)
+        self.mask_id = int(eng.mask_id)
+        self._uids = itertools.count(1)
+        self._server: Optional[asyncio.base_events.Server] = None
+        self._tasks: Set[asyncio.Task] = set()
+        self._workers_started = False
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def start(self, start_workers: bool = True) -> "ServeFrontend":
+        if start_workers:
+            self.start_workers()
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        return self
+
+    def start_workers(self) -> None:
+        """Start replica tick threads (idempotent; split out so tests can
+        stage submissions against a paused engine deterministically)."""
+        if not self._workers_started:
+            self.router.start()
+            self._workers_started = True
+
+    async def shutdown(self, drain: bool = True,
+                       timeout: Optional[float] = 60.0) -> None:
+        """Graceful shutdown, in three phases: (1) refuse new admissions —
+        connections already in flight or still being accepted get fast
+        429s instead of silently dying in a closed listener's backlog;
+        (2) drain (or shed) the replicas and flush in-flight responses;
+        (3) close the listener last.  A connection racing the final close
+        is the one case only a client-side timeout can cover."""
+        self.router.stop_accepting()
+        await asyncio.sleep(0)          # let pending accepts run -> 429
+        loop = asyncio.get_running_loop()
+        if self._workers_started:
+            await loop.run_in_executor(
+                None, lambda: self.router.shutdown(drain=drain,
+                                                   timeout=timeout))
+        if self._tasks:
+            await asyncio.wait(self._tasks, timeout=timeout)
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    # -- connection handling ------------------------------------------------
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        task = asyncio.current_task()
+        self._tasks.add(task)
+        try:
+            await self._handle_inner(reader, writer)
+        except (ConnectionError, asyncio.IncompleteReadError):
+            pass                          # client went away mid-response
+        finally:
+            self._tasks.discard(task)
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _handle_inner(self, reader, writer) -> None:
+        try:
+            head = await asyncio.wait_for(
+                reader.readuntil(b"\r\n\r\n"), _HEAD_TIMEOUT_S)
+        except (asyncio.TimeoutError, asyncio.IncompleteReadError,
+                asyncio.LimitOverrunError):
+            return
+        try:
+            request_line, *header_lines = head.decode(
+                "latin-1").split("\r\n")
+            method, path, _ = request_line.split(" ", 2)
+            headers = {}
+            for line in header_lines:
+                if ":" in line:
+                    k, v = line.split(":", 1)
+                    headers[k.strip().lower()] = v.strip()
+        except ValueError:
+            writer.write(protocol.json_response(400, protocol.error_payload(
+                "bad_request", "malformed HTTP request")))
+            await writer.drain()
+            return
+        body = b""
+        try:
+            n = int(headers.get("content-length", "0") or "0")
+        except ValueError:
+            n = -1
+        if n < 0 or n > _MAX_BODY:
+            writer.write(protocol.json_response(
+                400, protocol.error_payload(
+                    "bad_request",
+                    f"Content-Length must be an int in [0, {_MAX_BODY}]")))
+            await writer.drain()
+            return
+        if n:
+            body = await reader.readexactly(n)
+
+        if method == "GET" and path == "/healthz":
+            writer.write(protocol.json_response(200, {
+                "status": "ok", "model": self.model_name,
+                "replicas": len(self.router.workers),
+                "load": self.router.load}))
+        elif method == "GET" and path == "/v1/models":
+            writer.write(protocol.json_response(200, {
+                "object": "list",
+                "data": [{
+                    "id": self.model_name, "object": "model",
+                    "vocab": self.vocab, "mask_id": self.mask_id,
+                    "block_length": self.block_length,
+                    "max_seq_len": self.max_seq_len,
+                    "replicas": len(self.router.workers),
+                    "num_slots": sum(w.engine.num_slots
+                                     for w in self.router.workers),
+                }]}))
+        elif method == "GET" and path == "/v1/stats":
+            writer.write(protocol.json_response(200, self.router.stats()))
+        elif method == "POST" and path == "/v1/completions":
+            await self._completions(writer, body)
+        else:
+            writer.write(protocol.json_response(
+                404 if method in ("GET", "POST") else 405,
+                protocol.error_payload("not_found",
+                                       f"no route for {method} {path}")))
+        await writer.drain()
+
+    # -- /v1/completions ----------------------------------------------------
+
+    async def _completions(self, writer, body: bytes) -> None:
+        try:
+            payload = json.loads(body or b"{}")
+        except ValueError:
+            writer.write(protocol.json_response(400, protocol.error_payload(
+                "bad_request", "body is not valid JSON")))
+            return
+        try:
+            ids, gen_len, stream = protocol.parse_completion(
+                payload, block_length=self.block_length,
+                max_seq_len=self.max_seq_len, vocab=self.vocab)
+        except protocol.BadRequest as e:
+            writer.write(protocol.json_response(
+                400, protocol.error_payload("bad_request", str(e))))
+            return
+
+        uid = next(self._uids)
+        req = Request(uid=uid, prompt=ids, gen_length=gen_len)
+        events: asyncio.Queue = asyncio.Queue()
+        loop = asyncio.get_running_loop()
+
+        def deliver(ev):          # fires on the worker thread
+            loop.call_soon_threadsafe(events.put_nowait, ev)
+
+        try:
+            self.router.submit(req, deliver)
+        except Overloaded as e:
+            writer.write(protocol.json_response(
+                429, protocol.error_payload("overloaded", str(e))))
+            return
+        t0 = time.perf_counter()
+
+        if stream:
+            await self._stream_response(writer, events, uid,
+                                        int(ids.size), t0)
+        else:
+            await self._gathered_response(writer, events, uid,
+                                          int(ids.size), t0)
+
+    async def _stream_response(self, writer, events, uid: int,
+                               prompt_len: int, t0: float) -> None:
+        writer.write(protocol.sse_headers())
+        await writer.drain()
+        ttft: Optional[float] = None
+        ticks = 0
+        while True:
+            ev = await events.get()
+            if isinstance(ev, ShedEvent):
+                writer.write(protocol.sse_event("error",
+                             protocol.error_payload("overloaded",
+                                                    ev.reason)))
+                break
+            assert isinstance(ev, CommitEvent)
+            ticks += 1
+            if len(ev.positions):
+                if ttft is None:
+                    ttft = time.perf_counter() - t0
+                # buffered write, flushed by the transport: per-event
+                # drain() would wake the event loop per tick per slot and
+                # starve the worker threads of the GIL under load
+                writer.write(protocol.sse_event(
+                    "block_committed", protocol.commit_payload(ev)))
+            if ev.done:
+                writer.write(protocol.sse_event("done",
+                             protocol.completion_payload(
+                                 uid, self.model_name, prompt_len,
+                                 ev.final_tokens, ticks, ttft,
+                                 time.perf_counter() - t0)))
+                break
+        writer.write(protocol.SSE_DONE)
+        await writer.drain()
+
+    async def _gathered_response(self, writer, events, uid: int,
+                                 prompt_len: int, t0: float) -> None:
+        ttft: Optional[float] = None
+        ticks = 0
+        while True:
+            ev = await events.get()
+            if isinstance(ev, ShedEvent):
+                writer.write(protocol.json_response(
+                    429, protocol.error_payload("overloaded", ev.reason)))
+                return
+            ticks += 1
+            if ttft is None and len(ev.positions):
+                ttft = time.perf_counter() - t0
+            if ev.done:
+                writer.write(protocol.json_response(
+                    200, protocol.completion_payload(
+                        uid, self.model_name, prompt_len, ev.final_tokens,
+                        ticks, ttft, time.perf_counter() - t0)))
+                return
+
+
+def build_frontend(model, params, dcfg, *, model_name: str,
+                   replicas: int = 1, num_slots: int = 4,
+                   max_seq_len: int = 128, mode: str = "none",
+                   strategy: str = "least_loaded",
+                   max_queue: Optional[int] = None,
+                   max_queue_wait: Optional[float] = None,
+                   tick_floor_s: Optional[float] = None,
+                   policy=None, mesh=None, host: str = "127.0.0.1",
+                   port: int = 0, seed: int = 0,
+                   warmup: bool = True) -> ServeFrontend:
+    """Wire engines -> workers -> router -> frontend.  One independent
+    engine per replica (each with its own slot pool, rng chain, and tick
+    thread; params are shared read-only, and the jitted tick executable is
+    shared through the get_tick_fn cache)."""
+    import jax
+
+    from repro.serving.engine import ServingEngine
+    from repro.serving.frontend.router import EngineWorker
+
+    workers = []
+    for i in range(replicas):
+        eng = ServingEngine(model, params, dcfg, num_slots=num_slots,
+                            max_seq_len=max_seq_len, mode=mode,
+                            policy=policy, mesh=mesh,
+                            rng=jax.random.PRNGKey(seed + i))
+        if warmup:
+            eng.warmup()              # compile off-clock, before accepting
+        workers.append(EngineWorker(eng, name=f"replica-{i}",
+                                    max_queue=max_queue,
+                                    max_queue_wait=max_queue_wait,
+                                    tick_floor_s=tick_floor_s))
+    router = Router(workers, strategy=strategy)
+    return ServeFrontend(router, model_name=model_name, host=host,
+                         port=port)
+
+
+async def serve_forever(frontend: ServeFrontend) -> None:
+    """CLI helper: start, print the URL, run until cancelled, then drain."""
+    await frontend.start()
+    print(f"serving {frontend.model_name} on {frontend.url}  "
+          f"(replicas={len(frontend.router.workers)}, "
+          f"strategy={frontend.router.strategy})", flush=True)
+    try:
+        await asyncio.Event().wait()
+    finally:
+        await frontend.shutdown(drain=True)

@@ -65,6 +65,17 @@ class SlowFastPolicy(Policy):
         return default_k
 
 
+def expired_requests(queue: Sequence, now: float,
+                     max_queue_wait: float) -> list:
+    """Still-queued requests whose wait exceeds ``max_queue_wait`` — the
+    backpressure shed policy: the frontend cancels these on the engine and
+    answers 429/overloaded instead of letting queue wait grow unboundedly
+    (see docs/streaming_serving.md)."""
+    if max_queue_wait is None:
+        return []
+    return [r for r in queue if now - r.arrival_time > max_queue_wait]
+
+
 _POLICIES = {
     "fifo": FIFOPolicy,
     "sgf": ShortestGenFirstPolicy,

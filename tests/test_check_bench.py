@@ -14,6 +14,22 @@ GOOD_FUSED = {
                              "ratio_vs_legacy": 61.0},
 }
 
+GOOD_SERVE = {
+    "benchmark": "serve_stream",
+    "parity": {"stream_matches_generate": True,
+               "stream_matches_offline": True, "ticks_monotone": True,
+               "commit_events": 8},
+    "load": {
+        "goodput_ratio_2x": 1.9,
+        "host_cpus": 2,
+        "unpaced": {"goodput_ratio_2x": 0.9},
+        "one_replica": {"shed_rate": 0.6, "errors": 0, "completed": 70,
+                        "ticks_monotone": True},
+        "two_replicas": {"shed_rate": 0.2, "errors": 0, "completed": 140,
+                         "ticks_monotone": True},
+    },
+}
+
 GOOD_CYCLE = {
     "benchmark": "cycle_sim",
     "crossval": {
@@ -36,11 +52,34 @@ def _write(tmp_path, name, payload):
 
 def test_pass_on_good_payloads(tmp_path, capsys):
     files = [_write(tmp_path, "BENCH_fused_head.json", GOOD_FUSED),
-             _write(tmp_path, "BENCH_cycle_sim.json", GOOD_CYCLE)]
+             _write(tmp_path, "BENCH_cycle_sim.json", GOOD_CYCLE),
+             _write(tmp_path, "BENCH_serve_stream.json", GOOD_SERVE)]
     assert check_bench.main(files) == 0
     out = capsys.readouterr().out
     assert "all checks passed" in out
     assert "crossval_fused" in out
+    assert "goodput_ratio_2x" in out
+
+
+def test_serve_stream_gates(tmp_path):
+    for mutate in (
+        lambda b: b["parity"].__setitem__("stream_matches_offline", False),
+        lambda b: b["load"].__setitem__("goodput_ratio_2x", 1.2),
+        lambda b: b["load"]["one_replica"].__setitem__("shed_rate", 0.0),
+        lambda b: b["load"]["two_replicas"].__setitem__("shed_rate", 0.8),
+        lambda b: b["load"]["one_replica"].__setitem__("errors", 2),
+        lambda b: b["load"]["two_replicas"].__setitem__(
+            "ticks_monotone", False),
+    ):
+        bad = json.loads(json.dumps(GOOD_SERVE))
+        mutate(bad)
+        assert check_bench.main(
+            [_write(tmp_path, "BENCH_serve_stream.json", bad)]) == 1
+    # the unpaced host-bound ratio is informational, never a failure
+    ok = json.loads(json.dumps(GOOD_SERVE))
+    ok["load"]["unpaced"]["goodput_ratio_2x"] = 0.5
+    assert check_bench.main(
+        [_write(tmp_path, "BENCH_serve_stream.json", ok)]) == 0
 
 
 def test_fail_on_parity_regression(tmp_path, capsys):

@@ -243,7 +243,7 @@ def test_engine_fused_bit_identical_to_legacy_generate(setup):
                                      head_path="fused", head_chunk=96)
     eng = ServingEngine(model, params, dcfg, num_slots=1, max_seq_len=32,
                         mode="none", rng=jax.random.PRNGKey(99))
-    done = eng.run([Request(uid=0, prompt=np.asarray(prompt[0]),
+    done = eng.run([Request(uid=1, prompt=np.asarray(prompt[0]),
                             gen_length=16)])
     np.testing.assert_array_equal(done[0].tokens, np.asarray(ref[0]))
 
@@ -307,7 +307,7 @@ def test_quant_policy_reaches_jitted_ticks(setup):
         eng = ServingEngine(model, params, dcfg, num_slots=1, max_seq_len=32,
                             mode="none", rng=jax.random.PRNGKey(99),
                             breakdown=breakdown, fwd_kw={"quant": q})
-        done = eng.run([Request(uid=0, prompt=np.asarray(prompt[0]),
+        done = eng.run([Request(uid=1, prompt=np.asarray(prompt[0]),
                                 gen_length=16)])
         np.testing.assert_array_equal(done[0].tokens, outs["fused"][0])
     # and quantization does change the trajectory vs the unquantized run

@@ -77,7 +77,7 @@ def test_engine_spmd_bit_identical(setup, data, model_ax, mode):
     cfg, model, params = setup
     dcfg = _dcfg(cache="dual" if mode == "warm" else "none")
     rs = np.random.RandomState(3)
-    reqs = [Request(uid=i,
+    reqs = [Request(uid=1 + i,
                     prompt=rs.randint(0, cfg.vocab - 2,
                                       size=(8 + 2 * i,)).astype(np.int32),
                     gen_length=8 * (1 + i % 2)) for i in range(4)]
@@ -161,11 +161,11 @@ def test_warmup_keeps_clock_and_metrics_clean(setup):
     # fresh model objects force fresh jit cache keys -> real compiles
     cold_model = build_model(cfg)
     warm_model = build_model(cfg)
-    req = Request(uid=0, prompt=np.zeros(8, np.int32), gen_length=8)
+    req = Request(uid=1, prompt=np.zeros(8, np.int32), gen_length=8)
 
     cold = ServingEngine(cold_model, params, dcfg, num_slots=1,
                          max_seq_len=16, mode="none")
-    cold.submit(Request(uid=0, prompt=req.prompt, gen_length=8))
+    cold.submit(Request(uid=1, prompt=req.prompt, gen_length=8))
     t0 = time.perf_counter()
     cold.tick()
     cold_first = time.perf_counter() - t0
@@ -177,7 +177,7 @@ def test_warmup_keeps_clock_and_metrics_clean(setup):
     assert warm.now == 0.0
     assert warm.metrics.summary()["ticks"] == 0
     np.testing.assert_array_equal(np.asarray(warm.rng), rng_before)
-    warm.submit(Request(uid=0, prompt=req.prompt, gen_length=8))
+    warm.submit(Request(uid=1, prompt=req.prompt, gen_length=8))
     t0 = time.perf_counter()
     warm.tick()
     warm_first = time.perf_counter() - t0
@@ -193,7 +193,7 @@ def test_kv_valid_uploaded_once_per_tick(setup):
     cfg, model, params = setup
     eng = ServingEngine(model, params, _dcfg(gen=8), num_slots=2,
                         max_seq_len=24, mode="warm")
-    reqs = [Request(uid=i, prompt=np.full((8,), i, np.int32), gen_length=8)
+    reqs = [Request(uid=1 + i, prompt=np.full((8,), i, np.int32), gen_length=8)
             for i in range(5)]
     done = eng.run(reqs)
     assert len(done) == 5
