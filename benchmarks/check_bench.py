@@ -106,7 +106,61 @@ def _check_serve_stream(b: dict) -> List[Check]:
          one["errors"] + two["errors"] == 0),
         ("completed_1r_2r", f"{one['completed']}/{two['completed']}",
          one["completed"] > 0 and two["completed"] > one["completed"]),
+    ] + _serve_stream_metrics_checks(one, two)
+
+
+def _serve_stream_metrics_checks(one: dict, two: dict) -> List[Check]:
+    """Mid-load /metrics scrape assertions (loadgen --scrape-metrics):
+    exposition parsed, counters monotone across scrapes, per-replica
+    series present, and the scraped totals consistent with the client's
+    own request accounting."""
+    out: List[Check] = []
+    for tag, rep in (("1r", one), ("2r", two)):
+        m = rep.get("metrics")
+        if m is None:      # older payload without the scrape section
+            out.append((f"metrics_scrape_{tag}", "absent", False))
+            continue
+        n_replicas = int(tag[0])
+        out.append((f"metrics_monotone_{tag}", m["counters_monotone"],
+                    m["counters_monotone"] is True))
+        out.append((f"metrics_replica_series_{tag}",
+                    len(m["replica_series"]),
+                    len(m["replica_series"]) == n_replicas))
+        # every completed request streamed GEN tokens; the server-side
+        # counter must cover at least the client-confirmed completions
+        out.append((f"metrics_completed_{tag}",
+                    f"{m['requests_completed_total']:.0f}"
+                    f">={rep['completed']}",
+                    m["requests_completed_total"] >= rep["completed"]))
+        out.append((f"metrics_stage_series_{tag}", len(m["stage_series"]),
+                    len(m["stage_series"]) >= 2 * n_replicas))
+        out.append((f"metrics_drift_series_{tag}", len(m["drift"]), None))
+    return out
+
+
+def _check_obs_overhead(b: dict) -> List[Check]:
+    hook, gate = b["hook_frac"], b["hook_gate"]
+    ab, ab_gate = b["overhead"], b["ab_gate"]
+    out: List[Check] = [
+        # the documented <2% instrumentation-overhead claim, measured
+        # directly (hook cost / median bare tick — see the benchmark doc)
+        ("hook_frac_metrics", f"{hook['metrics'] * 100:.3f}%",
+         hook["metrics"] < gate),
+        ("hook_frac_trace", f"{hook['trace'] * 100:.3f}%",
+         hook["trace"] < gate),
+        # noisy A/B backstop: catches a hook that grew a device sync or a
+        # host copy (ms-scale, far outside measurement noise)
+        ("ab_overhead_metrics", f"{ab['metrics'] * 100:+.2f}%",
+         ab["metrics"] < ab_gate),
+        ("ab_overhead_trace", f"{ab['trace'] * 100:+.2f}%",
+         ab["trace"] < ab_gate),
     ]
+    lo, hi = b["drift_band"]
+    for stage, in_band in sorted(b["drift_in_band"].items()):
+        r = b["drift"]["drift"].get(stage)
+        val = "n/a" if r is None else f"{r:.3f} in ({lo}, {hi})"
+        out.append((f"drift_{stage}", val, bool(in_band)))
+    return out
 
 
 CHECKS: Dict[str, Callable[[dict], List[Check]]] = {
@@ -114,6 +168,7 @@ CHECKS: Dict[str, Callable[[dict], List[Check]]] = {
     "sharded_tick": _check_sharded_tick,
     "cycle_sim": _check_cycle_sim,
     "serve_stream": _check_serve_stream,
+    "obs_overhead": _check_obs_overhead,
 }
 
 

@@ -1,0 +1,208 @@
+"""Observability overhead: instrumented vs bare engine ticks (<2% gate).
+
+The obs hooks (repro.obs.serving.ServingObs) run on the engine tick path:
+per-stage histogram observes, lifecycle counters, drift accumulation, and
+(when tracing) back-dated span emission.  The design claim
+(docs/observability.md) is that all of it is host-side bookkeeping over
+numbers the tick already computed — no extra device syncs — so the
+per-tick cost must disappear into the millisecond-scale tick.
+
+This benchmark drives the same offline serving workload three ways:
+
+  off      obs=None (the seed configuration)
+  metrics  ServingObs with metrics + drift, tracing disabled (the
+           always-on production configuration build_frontend wires)
+  trace    metrics + drift + an enabled TraceCollector (--trace-out)
+
+and reports median per-tick seconds for each, interleaving the three
+configurations round-robin so CI-host frequency drift hits them equally.
+
+The A/B difference is microseconds against ~ms ticks, inside run-to-run
+host noise, so the <2% claim is gated on a *direct* measurement:
+``hook_frac`` times the exact per-tick hook sequence the engine executes
+(obs.tick with a representative stage split + lifecycle counter ops) in
+isolation and divides by the median bare tick.  check_bench.py gates
+``hook_frac_metrics``/``hook_frac_trace`` < 2% and keeps the noisy A/B
+``overhead_metrics`` as a coarse backstop (< 10%: an accidental device
+sync or host copy in a hook shows up at ms scale, far above noise).
+
+Also records a drift-monitor report from the instrumented run and checks
+its calibrated per-stage ratios against obs.drift.HOST_DRIFT_BAND — the
+live equivalent of PR 4's offline cross-validation.
+
+Emits BENCH_obs_overhead.json.
+
+    PYTHONPATH=src python -m benchmarks.obs_overhead [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+
+SMOKE = "--smoke" in sys.argv
+SEED = 0
+ARCH = "llada-8b"
+PROMPT_LEN = 16
+BLOCK_LEN = 8
+STEPS = 4
+GEN_TOKENS = 16
+SLOTS = 4
+ROUNDS = 3 if SMOKE else 6       # interleaved repeats per configuration
+REQUESTS = 8                     # per round: 8 reqs x 8 ticks / 4 slots
+HOOK_GATE = 0.02                 # the documented <2% claim (direct)
+AB_GATE = 0.10                   # A/B backstop: catches ms-scale leaks
+HOOK_ITERS = 2000                # per-config hook microbench iterations
+
+
+def _setup():
+    from repro.configs import base
+    from repro.core import diffusion
+    from repro.models.registry import build_model
+
+    cfg = base.get_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+    dcfg = diffusion.DiffusionConfig(
+        gen_length=GEN_TOKENS, block_length=BLOCK_LEN,
+        steps_per_block=STEPS, cache_mode="none")
+    return cfg, model, params, dcfg
+
+
+def _make_obs(cfg, dcfg, trace_enabled: bool):
+    from repro.obs import ServingObs, TraceCollector
+    from repro.obs.drift import modeled_tick_stages
+
+    obs = ServingObs(trace=TraceCollector(enabled=trace_enabled))
+    obs.set_drift_model(modeled_tick_stages(
+        cfg, dcfg, batch=SLOTS, prompt_len=PROMPT_LEN))
+    return obs
+
+
+def _run_once(cfg, model, params, dcfg, obs) -> list:
+    """One drained offline run; returns the per-tick seconds list."""
+    from repro.serving import Request, ServingEngine
+
+    rs = np.random.RandomState(SEED)
+    reqs = [Request(uid=1 + i,
+                    prompt=rs.randint(0, cfg.vocab - 2,
+                                      size=(PROMPT_LEN,)).astype(np.int32),
+                    gen_length=GEN_TOKENS)
+            for i in range(REQUESTS)]
+    eng = ServingEngine(model, params, dcfg, num_slots=SLOTS,
+                        max_seq_len=PROMPT_LEN + GEN_TOKENS, mode="none",
+                        rng=jax.random.PRNGKey(SEED), obs=obs)
+    eng.warmup()
+    sink = []
+    for r in reqs:
+        eng.submit(r, on_commit=sink.append)  # exercise the streaming path
+    eng.run()
+    return list(eng.metrics._tick_s)
+
+
+def _hook_cost_s(obs) -> float:
+    """Median seconds of one tick's worth of obs hook calls, measured in
+    isolation: the stage/tick histograms + gauges + drift feed + (when
+    tracing) the back-dated span emission, plus the typical per-tick
+    lifecycle traffic (one tokens_committed + one kv upload)."""
+    import time
+    stages = {"host_prep": 2e-4, "dispatch": 5e-4, "device_sync": 1e-4,
+              "commit": 5e-5}
+    ts = []
+    for rep in range(5):
+        t0 = time.perf_counter()
+        for i in range(HOOK_ITERS):
+            obs.tokens_committed(4)
+            obs.kv_valid_upload()
+            obs.tick(stages, 8.5e-4, SLOTS, 1, t_start_us=float(i))
+        ts.append((time.perf_counter() - t0) / HOOK_ITERS)
+        obs.trace.clear()             # keep the buffer from saturating
+    return sorted(ts)[len(ts) // 2]
+
+
+def run() -> list:
+    cfg, model, params, dcfg = _setup()
+    configs = {
+        "off": lambda: None,
+        "metrics": lambda: _make_obs(cfg, dcfg, trace_enabled=False),
+        "trace": lambda: _make_obs(cfg, dcfg, trace_enabled=True),
+    }
+    ticks = {name: [] for name in configs}
+    last_obs = {}
+    # interleave rounds so slow host drift (thermal, noisy neighbors)
+    # biases every configuration equally instead of whichever ran last
+    for _ in range(ROUNDS):
+        for name, make in configs.items():
+            obs = make()
+            ticks[name].extend(_run_once(cfg, model, params, dcfg, obs))
+            if obs is not None:
+                last_obs[name] = obs
+
+    med = {name: float(np.median(ts)) for name, ts in ticks.items()}
+    overhead = {name: med[name] / med["off"] - 1.0
+                for name in ("metrics", "trace")}
+    hook_s = {name: _hook_cost_s(configs[name]())
+              for name in ("metrics", "trace")}
+    hook_frac = {name: s / med["off"] for name, s in hook_s.items()}
+
+    from repro.obs.drift import HOST_DRIFT_BAND
+    drift_rep = last_obs["metrics"].drift_report()
+    lo, hi = HOST_DRIFT_BAND
+    drift_in_band = {
+        stage: (r is None or lo <= r <= hi)
+        for stage, r in drift_rep["drift"].items()}
+
+    payload = {
+        "benchmark": "obs_overhead", "smoke": SMOKE,
+        "rounds": ROUNDS, "requests_per_round": REQUESTS,
+        "ticks_per_config": {k: len(v) for k, v in ticks.items()},
+        "median_tick_s": med,
+        "overhead": overhead,
+        "hook_cost_s": hook_s,
+        "hook_frac": hook_frac,
+        "hook_gate": HOOK_GATE,
+        "ab_gate": AB_GATE,
+        "drift": drift_rep,
+        "drift_band": [lo, hi],
+        "drift_in_band": drift_in_band,
+    }
+    with open("BENCH_obs_overhead.json", "w") as f:
+        json.dump(payload, f, indent=2)
+
+    rows: list[Row] = []
+    for name in ("off", "metrics", "trace"):
+        rows.append((f"obs_overhead/tick/{name}", med[name] * 1e6,
+                     f"{len(ticks[name])}ticks"))
+    rows.append(("obs_overhead/overhead_metrics", 0.0,
+                 f"{overhead['metrics'] * 100:+.2f}%"))
+    rows.append(("obs_overhead/overhead_trace", 0.0,
+                 f"{overhead['trace'] * 100:+.2f}%"))
+    for name in ("metrics", "trace"):
+        rows.append((f"obs_overhead/hook_frac_{name}",
+                     hook_s[name] * 1e6,
+                     f"{hook_frac[name] * 100:.3f}%"))
+    rows.append(("obs_overhead/json", 0.0, "BENCH_obs_overhead.json"))
+    print(f"median tick: off {med['off']*1e3:.3f}ms  "
+          f"metrics {med['metrics']*1e3:.3f}ms "
+          f"({overhead['metrics']*100:+.2f}%)  "
+          f"trace {med['trace']*1e3:.3f}ms "
+          f"({overhead['trace']*100:+.2f}%)")
+    print(f"hook cost: metrics {hook_s['metrics']*1e6:.1f}us/tick "
+          f"({hook_frac['metrics']*100:.3f}% of tick)  "
+          f"trace {hook_s['trace']*1e6:.1f}us/tick "
+          f"({hook_frac['trace']*100:.3f}%)")
+    print(f"drift in {HOST_DRIFT_BAND}: {drift_in_band}")
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,12 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   serve_stream         online streaming frontend under saturating Poisson
                        load through the real HTTP+SSE surface: goodput /
                        TTFT / shed rate, 1 vs 2 replicas + stream parity
+                       + mid-load /metrics scrape validation
                        (emits BENCH_serve_stream.json)
+  obs_overhead         observability instrumentation cost: bare vs
+                       metrics vs traced engine ticks, direct per-tick
+                       hook cost (<2% gate) + live drift-monitor bands
+                       (emits BENCH_obs_overhead.json)
 
 ``check_bench`` (not listed: it is the CI gate, not a benchmark) validates
 every emitted BENCH_*.json afterwards.
@@ -52,6 +57,7 @@ MODULES = [
     "table3_pipeline", "table4_crossval", "table5_quant",
     "table6_end2end", "fig9_dse", "roofline_report", "serve_engine",
     "fused_head", "sharded_tick", "cycle_sim", "serve_stream",
+    "obs_overhead",
 ]
 
 

@@ -23,6 +23,12 @@ for reference).  Sections:
            goodput tok/s, TTFT/latency p50/p99, shed rate;
   ratio    2-replica / 1-replica goodput (CI floor: >= 1.5x).
 
+The load generator also scrapes ``/metrics`` mid-window and at the end
+(``--scrape-metrics``): the exposition must parse, counters must be
+monotone across the two scrapes, and the per-replica series must cover
+every replica — check_bench.py gates all of it, so the CI serve-stream
+job exercises the observability surface under real concurrent load.
+
 Emits BENCH_serve_stream.json, validated by benchmarks/check_bench.py.
 
     PYTHONPATH=src python -m benchmarks.serve_stream [--smoke]
@@ -127,6 +133,7 @@ async def _load(model, params, dcfg, replicas: int,
             "--prompt-len", str(PROMPT_LEN),
             "--max-tokens", str(GEN_TOKENS),
             "--seed", str(SEED), "--window", str(WINDOW_S),
+            "--scrape-metrics",       # mid-load /metrics parse+monotone
             stdout=asyncio.subprocess.PIPE,
             stderr=asyncio.subprocess.PIPE)
         out, err = await proc.communicate()

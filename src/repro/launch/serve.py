@@ -87,6 +87,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-seq-len", type=int, default=0,
                     help="engine canvas length for --http "
                          "(default: prompt-len + gen-len)")
+    # observability (docs/observability.md)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON timeline "
+                         "(tick stages, request lifecycle, router hops) "
+                         "on exit; works for both the offline engine "
+                         "path and --http")
+    ap.add_argument("--profile-ticks", type=int, default=0, metavar="N",
+                    help="wrap the first N ticks of each replica in a "
+                         "jax.profiler device trace (--http path)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="jax.profiler output dir (default "
+                         "/tmp/dllm-profile)")
+    ap.add_argument("--no-drift", dest="drift", action="store_false",
+                    help="disable the live model-vs-measured drift monitor")
     return ap
 
 
@@ -123,11 +137,13 @@ def run_legacy(args, cfg, model, params, dcfg, mesh=None) -> None:
         rng, r_prompt, r_gen = jax.random.split(rng, 3)
         prompt = jax.random.randint(
             r_prompt, (args.batch, args.prompt_len), 0, cfg.vocab - 2)
-        t0 = time.time()
+        # monotonic clock for durations (clock audit, docs/observability.md)
+        # — wall clocks can step under NTP and corrupt the measurement
+        t0 = time.perf_counter()
         out = diffusion.generate(model, params, prompt, dcfg, rng=r_gen,
                                  mesh=mesh, **fwd_kw)
         out.block_until_ready()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         tag = "warmup+compile" if req == 0 else "steady"
         gen_tokens = args.batch * args.gen_len
         if req > 0:
@@ -162,6 +178,36 @@ def make_requests(args, cfg, seed: int) -> list:
     return reqs
 
 
+def make_obs(args, cfg, dcfg, num_slots: int, max_seq: int):
+    """Root ServingObs for the offline engine path: tracing on iff
+    --trace-out, drift armed when the analytical model covers the arch."""
+    from repro.obs import ServingObs, TraceCollector
+
+    obs = ServingObs(trace=TraceCollector(enabled=bool(args.trace_out)))
+    if args.drift:
+        try:
+            from repro.obs.drift import modeled_tick_stages
+            obs.set_drift_model(modeled_tick_stages(
+                cfg, dcfg, batch=num_slots,
+                prompt_len=max(1, max_seq - dcfg.gen_length)))
+        except Exception as e:
+            print(f"drift monitor disabled (no analytical model): {e}")
+    return obs
+
+
+def _finish_obs(args, obs) -> None:
+    if args.trace_out:
+        obs.trace.save(args.trace_out)
+        print(f"wrote trace ({len(obs.trace.events())} events, "
+              f"{obs.trace.dropped} dropped) to {args.trace_out}")
+    rep = obs.drift_report()
+    if rep is not None and rep["ticks"]:
+        drift = {k: (round(v, 3) if v is not None else None)
+                 for k, v in rep["drift"].items()}
+        print(f"drift (calibrated measured/modeled, scale "
+              f"{rep['scale']:.3g}): {drift}")
+
+
 def run_engine(args, cfg, model, params, dcfg, mesh=None) -> None:
     num_slots = args.slots or args.batch
     max_seq = args.prompt_len + args.gen_len
@@ -169,11 +215,13 @@ def run_engine(args, cfg, model, params, dcfg, mesh=None) -> None:
               if args.policy == "slowfast" else get_policy(args.policy))
     reqs = make_requests(args, cfg, args.seed)
     fwd_kw = _fwd_kw(cfg, model, params, num_slots)
+    obs = make_obs(args, cfg, dcfg, num_slots, max_seq)
 
     eng = ServingEngine(model, params, dcfg, num_slots=num_slots,
                         max_seq_len=max_seq, mode=args.mode, policy=policy,
                         rng=jax.random.PRNGKey(args.seed),
-                        breakdown=args.breakdown, fwd_kw=fwd_kw, mesh=mesh)
+                        breakdown=args.breakdown, fwd_kw=fwd_kw, mesh=mesh,
+                        obs=obs)
     eng.warmup()    # compile off-clock: the timed ticks charge no jit time
     completed = eng.run(reqs)
     for c in completed[: min(8, len(completed))]:
@@ -187,6 +235,7 @@ def run_engine(args, cfg, model, params, dcfg, mesh=None) -> None:
           f"policy={policy.name} pool={eng.pool.stats()}"
           + (f" mesh={dict(mesh.shape)}" if mesh is not None else ""))
     print(eng.metrics.format_summary())
+    _finish_obs(args, obs)
 
 
 def run_http(args, cfg, model, params, dcfg, mesh=None) -> None:
@@ -195,16 +244,21 @@ def run_http(args, cfg, model, params, dcfg, mesh=None) -> None:
 
     from repro.serving.frontend import build_frontend, serve_forever
 
+    from repro.obs import ServingObs, TraceCollector
+
     policy = (get_policy("slowfast", threshold=args.slowfast_threshold)
               if args.policy == "slowfast" else get_policy(args.policy))
     max_seq = args.max_seq_len or (args.prompt_len + args.gen_len)
+    obs = ServingObs(trace=TraceCollector(enabled=bool(args.trace_out)))
     frontend = build_frontend(
         model, params, dcfg, model_name=args.arch,
         replicas=args.replicas, num_slots=args.slots or args.batch,
         max_seq_len=max_seq, mode=args.mode, strategy=args.route,
         max_queue=args.max_queue, max_queue_wait=args.max_queue_wait,
         policy=policy, mesh=mesh, host=args.host, port=args.http,
-        seed=args.seed)
+        seed=args.seed, obs=obs, breakdown=args.breakdown,
+        drift=args.drift, profile_ticks=args.profile_ticks,
+        profile_dir=args.profile_dir)
     try:
         asyncio.run(serve_forever(frontend))
     except KeyboardInterrupt:
@@ -213,6 +267,14 @@ def run_http(args, cfg, model, params, dcfg, mesh=None) -> None:
         for w in frontend.router.workers:
             print(f"--- {w.name} ---")
             print(w.engine.metrics.format_summary())
+            rep_obs = w.engine.obs
+            if rep_obs is not None and rep_obs.drift is not None:
+                r = rep_obs.drift_report()
+                if r["ticks"]:
+                    drift = {k: (round(v, 3) if v is not None else None)
+                             for k, v in r["drift"].items()}
+                    print(f"drift (scale {r['scale']:.3g}): {drift}")
+        _finish_obs(args, obs)
 
 
 def make_mesh_arg(spec: str):

@@ -1,0 +1,29 @@
+"""repro.obs — stdlib-only observability for the serving stack.
+
+Three pieces (docs/observability.md):
+
+  * :mod:`repro.obs.registry` — labeled counters / gauges / histograms
+    with Prometheus text exposition (``/metrics``).
+  * :mod:`repro.obs.tracing` — Chrome-trace / Perfetto span collector
+    (``--trace-out trace.json``).
+  * :mod:`repro.obs.drift` — live measured-vs-modeled per-stage drift
+    against ``sim/analytical`` predictions.
+
+:class:`~repro.obs.serving.ServingObs` bundles all three behind the
+hooks the engine / router / frontend call.
+"""
+from repro.obs.drift import (DriftMonitor, HOST_DRIFT_BAND,
+                             modeled_tick_stages)
+from repro.obs.registry import (CONTENT_TYPE, Counter, Gauge, Histogram,
+                                LATENCY_BUCKETS, Registry, exp_buckets,
+                                parse_exposition, validate_histogram)
+from repro.obs.serving import ServingObs, frontend_metrics
+from repro.obs.tracing import TraceCollector, now_us, validate_trace
+
+__all__ = [
+    "CONTENT_TYPE", "Counter", "DriftMonitor", "Gauge", "Histogram",
+    "HOST_DRIFT_BAND", "LATENCY_BUCKETS", "Registry", "ServingObs",
+    "TraceCollector", "exp_buckets", "frontend_metrics",
+    "modeled_tick_stages", "now_us", "parse_exposition",
+    "validate_histogram", "validate_trace",
+]

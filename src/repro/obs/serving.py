@@ -1,0 +1,280 @@
+"""Serving-stack observability bundle: metrics + tracing + drift in one
+object the engine, router, and HTTP frontend all hook into.
+
+One root :class:`ServingObs` owns the shared :class:`~repro.obs.registry.
+Registry` and :class:`~repro.obs.tracing.TraceCollector`; each replica
+gets a cheap labeled view via :meth:`for_replica`, so every series carries
+a ``replica`` label and one ``/metrics`` scrape covers the whole router.
+
+Metric catalog (names/labels/units in docs/observability.md):
+
+  dllm_requests_total{replica,event}        queued|admitted|completed|shed
+  dllm_tokens_committed_total{replica}      committed generation tokens
+  dllm_blocks_committed_total{replica}      fully-unmasked blocks
+  dllm_ticks_total{replica}                 engine ticks
+  dllm_kv_valid_uploads_total{replica}      host->device mask refreshes
+  dllm_policy_early_exits_total{replica}    SlowFast whole-block commits
+  dllm_tick_seconds{replica}                histogram, full tick wall time
+  dllm_tick_stage_seconds{replica,stage}    histogram, per-stage seconds
+  dllm_queue_wait_seconds{replica}          histogram, arrival -> admit
+  dllm_ttft_seconds{replica}                histogram, arrival -> first commit
+  dllm_request_latency_seconds{replica}     histogram, arrival -> done
+  dllm_active_slots{replica}                gauge
+  dllm_queue_depth{replica}                 gauge
+  dllm_drift_ratio{replica,stage}           gauge, calibrated measured/modeled
+  dllm_drift_scale{replica}                 gauge, hardware calibration factor
+  dllm_http_requests_total{route,code}      HTTP frontend answers
+  dllm_router_submits_total{replica}        requests routed to each replica
+  dllm_router_overloaded_total{}            submissions every replica refused
+
+The engine calls the ``on_*``/``tick`` hooks with data it already has in
+hand (stage timings, commit deltas), so instrumentation adds no device
+syncs and no extra clock reads — benchmarks/obs_overhead.py pins the
+total tick-path cost under 2%.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional
+
+from repro.obs.drift import DriftMonitor
+from repro.obs.registry import LATENCY_BUCKETS, Registry
+from repro.obs.tracing import TraceCollector
+
+
+class ServingObs:
+    """Root observability context (or a replica-labeled view of one)."""
+
+    def __init__(self, registry: Optional[Registry] = None,
+                 trace: Optional[TraceCollector] = None,
+                 replica: str = "replica-0",
+                 _root: Optional["ServingObs"] = None):
+        self.registry = registry if registry is not None else Registry()
+        # disabled-by-default collector: span calls cost one bool check
+        # until someone passes/enables a real one (--trace-out)
+        self.trace = trace if trace is not None \
+            else TraceCollector(enabled=False)
+        self.replica = replica
+        self.drift: Optional[DriftMonitor] = None
+        r = self.registry
+        if _root is None:
+            self._requests = r.counter(
+                "dllm_requests_total", "Request lifecycle transitions",
+                ("replica", "event"))
+            self._tokens = r.counter(
+                "dllm_tokens_committed_total",
+                "Committed generation tokens", ("replica",))
+            self._blocks = r.counter(
+                "dllm_blocks_committed_total",
+                "Fully unmasked blocks", ("replica",))
+            self._ticks = r.counter(
+                "dllm_ticks_total", "Engine ticks", ("replica",))
+            self._kv_uploads = r.counter(
+                "dllm_kv_valid_uploads_total",
+                "Batched host->device kv-validity uploads", ("replica",))
+            self._early_exits = r.counter(
+                "dllm_policy_early_exits_total",
+                "SlowFast whole-block early-exit commits", ("replica",))
+            self._tick_s = r.histogram(
+                "dllm_tick_seconds", "Engine tick wall seconds",
+                ("replica",), LATENCY_BUCKETS)
+            self._stage_s = r.histogram(
+                "dllm_tick_stage_seconds",
+                "Per-stage engine tick seconds", ("replica", "stage"),
+                LATENCY_BUCKETS)
+            self._queue_wait = r.histogram(
+                "dllm_queue_wait_seconds",
+                "Arrival to slot admission", ("replica",), LATENCY_BUCKETS)
+            self._ttft = r.histogram(
+                "dllm_ttft_seconds",
+                "Arrival to first committed tokens", ("replica",),
+                LATENCY_BUCKETS)
+            self._latency = r.histogram(
+                "dllm_request_latency_seconds",
+                "Arrival to completion", ("replica",), LATENCY_BUCKETS)
+            self._active = r.gauge(
+                "dllm_active_slots", "Occupied batch slots", ("replica",))
+            self._queue_depth = r.gauge(
+                "dllm_queue_depth", "Requests queued (not admitted)",
+                ("replica",))
+            self._drift = r.gauge(
+                "dllm_drift_ratio",
+                "Calibrated measured/modeled per-stage drift",
+                ("replica", "stage"))
+            self._drift_scale = r.gauge(
+                "dllm_drift_scale",
+                "measured/modeled hardware calibration factor",
+                ("replica",))
+        else:
+            for attr in ("_requests", "_tokens", "_blocks", "_ticks",
+                         "_kv_uploads", "_early_exits", "_tick_s",
+                         "_stage_s", "_queue_wait", "_ttft", "_latency",
+                         "_active", "_queue_depth", "_drift",
+                         "_drift_scale"):
+                setattr(self, attr, getattr(_root, attr))
+        # pre-bound label handles for the tick hot path: label validation
+        # and key construction happen once here, not per tick
+        # (benchmarks/obs_overhead.py gates the per-tick cost)
+        rep = self.replica
+        self._b_ticks = self._ticks.labels(replica=rep)
+        self._b_tokens = self._tokens.labels(replica=rep)
+        self._b_blocks = self._blocks.labels(replica=rep)
+        self._b_kv = self._kv_uploads.labels(replica=rep)
+        self._b_tick_s = self._tick_s.labels(replica=rep)
+        self._b_active = self._active.labels(replica=rep)
+        self._b_queue = self._queue_depth.labels(replica=rep)
+        self._b_scale = self._drift_scale.labels(replica=rep)
+        self._stage_handles: Dict[str, object] = {}
+        self._drift_handles: Dict[str, object] = {}
+        self._tick_count = 0
+        # drift gauges re-derive ratios over all stages; refreshing every
+        # tick would dominate the hook budget for no scrape-visible gain
+        self.drift_refresh_ticks = 16
+
+    def for_replica(self, name: str) -> "ServingObs":
+        """Labeled view sharing this root's registry and trace buffer."""
+        return ServingObs(self.registry, self.trace, replica=name,
+                          _root=self)
+
+    def set_drift_model(self, modeled: Mapping[str, float],
+                        calibrate: bool = True) -> "ServingObs":
+        """Arm the drift monitor with modeled per-tick stage seconds
+        (see obs.drift.modeled_tick_stages)."""
+        self.drift = DriftMonitor(modeled, calibrate=calibrate)
+        return self
+
+    # -- request lifecycle (engine hooks) -----------------------------------
+
+    def request_queued(self, uid: int) -> None:
+        self._requests.inc(replica=self.replica, event="queued")
+        if self.trace.enabled:
+            self.trace.begin_async("request", id=uid,
+                                   args={"replica": self.replica})
+
+    def request_admitted(self, uid: int, queue_wait_s: float) -> None:
+        self._requests.inc(replica=self.replica, event="admitted")
+        self._queue_wait.observe(queue_wait_s, replica=self.replica)
+        if self.trace.enabled:
+            self.trace.instant_async(
+                "admitted", id=uid,
+                args={"queue_wait_s": round(queue_wait_s, 6)})
+
+    def request_first_commit(self, uid: int, ttft_s: float) -> None:
+        self._ttft.observe(ttft_s, replica=self.replica)
+        if self.trace.enabled:
+            self.trace.instant_async("first_commit", id=uid,
+                                     args={"ttft_s": round(ttft_s, 6)})
+
+    def block_committed(self, uid: int, block_idx: int, tick: int,
+                        n_tokens: int, positions=None,
+                        tokens=None) -> None:
+        self._b_blocks.inc()
+        if self.trace.enabled:
+            args = {"tick": tick, "block_idx": block_idx,
+                    "n_tokens": n_tokens}
+            if positions is not None:
+                args["positions"] = [int(p) for p in positions]
+                args["tokens"] = [int(t) for t in tokens]
+            self.trace.instant_async("block_committed", id=uid, args=args)
+
+    def tokens_committed(self, n: int) -> None:
+        if n > 0:
+            self._b_tokens.inc(n)
+
+    def request_done(self, uid: int, latency_s: float, ticks: int) -> None:
+        self._requests.inc(replica=self.replica, event="completed")
+        self._latency.observe(latency_s, replica=self.replica)
+        if self.trace.enabled:
+            self.trace.end_async("request", id=uid,
+                                 args={"latency_s": round(latency_s, 6),
+                                       "ticks": ticks})
+
+    def request_shed(self, uid: int) -> None:
+        self._requests.inc(replica=self.replica, event="shed")
+        if self.trace.enabled:
+            self.trace.end_async("request", id=uid,
+                                 args={"shed": True})
+
+    # -- tick (engine hook) -------------------------------------------------
+
+    def tick(self, stage_seconds: Mapping[str, float], dt: float,
+             active_slots: int, queued: int,
+             t_start_us: Optional[float] = None) -> None:
+        """One engine tick: histogram the stage split, refresh gauges,
+        feed drift, and (when tracing) emit the tick span with the stage
+        sub-spans back-dated to the measured boundaries."""
+        self._tick_count += 1
+        self._b_ticks.inc()
+        self._b_tick_s.observe(dt)
+        handles = self._stage_handles
+        for stage, s in stage_seconds.items():
+            h = handles.get(stage)
+            if h is None:
+                h = handles[stage] = self._stage_s.labels(
+                    replica=self.replica, stage=stage)
+            h.observe(s)
+        self._b_active.set(active_slots)
+        self._b_queue.set(queued)
+        if self.drift is not None:
+            self.drift.observe_tick(stage_seconds)
+            self.drift.observe("tick", dt)
+            if self._tick_count == 1 \
+                    or self._tick_count % self.drift_refresh_ticks == 0:
+                self._refresh_drift_gauges()
+        if self.trace.enabled and t_start_us is not None:
+            # complete (ph X) events built in one list, one lock: the
+            # stage boundaries were measured by the engine, so tracing a
+            # tick re-reads no clocks
+            tr = self.trace
+            pid, tid = tr.pid, tr._tid()
+            t = t_start_us
+            evs = [{"ph": "X", "name": "tick", "cat": "engine",
+                    "ts": t_start_us, "dur": 0.0, "pid": pid, "tid": tid,
+                    "args": {"active_slots": active_slots,
+                             "queued": queued}}]
+            for stage, s in stage_seconds.items():
+                evs.append({"ph": "X", "name": stage, "cat": "engine",
+                            "ts": t, "dur": s * 1e6, "pid": pid,
+                            "tid": tid})
+                t += s * 1e6
+            evs[0]["dur"] = max(t - t_start_us, dt * 1e6)
+            evs.append({"ph": "C", "name": "slots", "cat": "engine",
+                        "ts": t_start_us, "pid": pid, "tid": tid,
+                        "args": {"active": active_slots,
+                                 "queued": queued}})
+            tr.emit_many(evs)
+
+    def _refresh_drift_gauges(self) -> None:
+        handles = self._drift_handles
+        for stage, ratio in self.drift.ratios().items():
+            if ratio is None:
+                continue
+            h = handles.get(stage)
+            if h is None:
+                h = handles[stage] = self._drift.labels(
+                    replica=self.replica, stage=stage)
+            h.set(ratio)
+        self._b_scale.set(self.drift.scale)
+
+    def kv_valid_upload(self) -> None:
+        self._b_kv.inc()
+
+    def policy_early_exit(self, n: int = 1) -> None:
+        if n > 0:
+            self._early_exits.inc(n, replica=self.replica)
+
+    def drift_report(self) -> Optional[dict]:
+        return None if self.drift is None else self.drift.report()
+
+
+def frontend_metrics(registry: Registry):
+    """HTTP-layer counters (created once per root registry)."""
+    http = registry.counter("dllm_http_requests_total",
+                            "HTTP responses by route and status code",
+                            ("route", "code"))
+    submits = registry.counter("dllm_router_submits_total",
+                               "Requests routed to each replica",
+                               ("replica",))
+    overloaded = registry.counter(
+        "dllm_router_overloaded_total",
+        "Submissions refused by every replica (HTTP 429)", ())
+    return http, submits, overloaded

@@ -135,7 +135,7 @@ class ServingEngine:
                  mode: str = "warm", policy: Optional[Policy] = None,
                  rng: Optional[jax.Array] = None, jit_steps: bool = True,
                  breakdown: bool = False, fwd_kw: Optional[dict] = None,
-                 mesh=None):
+                 mesh=None, obs=None):
         if mode not in ("warm", "none"):
             raise ValueError(f"unknown engine mode {mode!r}")
         self.model = model
@@ -147,6 +147,13 @@ class ServingEngine:
         self.mask_id = int(model.cfg.mask_id)
         self.policy = policy or FIFOPolicy()
         self.breakdown = breakdown
+        # optional repro.obs.ServingObs: per-stage tick histograms, spans,
+        # request-lifecycle counters, drift gauges (docs/observability.md).
+        # Every hook receives data the tick already computed, so obs=None
+        # keeps the hot path identical and obs!=None adds only host-side
+        # bookkeeping (bounded <2% by benchmarks/obs_overhead.py).
+        self.obs = obs
+        self._early_exits_seen = 0
         self.fwd_kw = dict(fwd_kw or {})
         # QuantPolicy is not a jax type: bind it statically into the jitted
         # tick fns rather than passing it as a runtime kwarg
@@ -255,6 +262,8 @@ class ServingEngine:
             self._commit_cbs[int(uid)] = on_commit
         self.metrics.request_arrived(request.uid, request.arrival_time,
                                      request.gen_length)
+        if self.obs is not None:
+            self.obs.request_queued(int(uid))
 
     def cancel(self, uid: int) -> bool:
         """Remove a still-*queued* request (the frontend's max_queue_wait
@@ -265,6 +274,8 @@ class ServingEngine:
                 del self.queue[i]
                 self._commit_cbs.pop(uid, None)
                 self.metrics.request_shed(uid, self.now)
+                if self.obs is not None:
+                    self.obs.request_shed(uid)
                 return True
         return False
 
@@ -293,6 +304,9 @@ class ServingEngine:
             self._valid_np[slot] = np.arange(self.max_seq_len) < pick.total_len
             self._kv_dirty = True      # uploaded once per tick, not per admit
             self.metrics.request_admitted(pick.uid, self.now)
+            if self.obs is not None:
+                self.obs.request_admitted(
+                    pick.uid, max(0.0, self.now - pick.arrival_time))
 
     def _release(self, slot: int, x_host: np.ndarray) -> None:
         s = self.slots[slot]
@@ -303,6 +317,9 @@ class ServingEngine:
             arrival_time=req.arrival_time, admitted_time=s.admitted_time,
             completed_time=self.now, ticks=s.ticks))
         self.metrics.request_completed(req.uid, self.now, s.ticks)
+        if self.obs is not None:
+            self.obs.request_done(
+                req.uid, max(0.0, self.now - req.arrival_time), s.ticks)
         self.slots[slot] = None
         del self.slot_of_uid[req.uid]
         self._valid_np[slot] = np.arange(self.max_seq_len) < 1
@@ -330,6 +347,8 @@ class ServingEngine:
             self.kv_valid = self._put_rows(jnp.asarray(self._valid_np))
             self._kv_dirty = False
             self.kv_valid_uploads += 1
+            if self.obs is not None:
+                self.obs.kv_valid_upload()
 
     def warmup(self) -> "ServingEngine":
         """Compile the tick executable(s) with a dummy zero-commit tick,
@@ -356,6 +375,8 @@ class ServingEngine:
         """Admit, run one fused batched step, advance slot states.
 
         Returns False when there is nothing to do (drained)."""
+        obs = self.obs
+        t_enter = time.perf_counter()
         self._admit()
         if self.active_slots == 0:
             nxt = self._next_arrival()
@@ -381,7 +402,17 @@ class ServingEngine:
         self.rng, srng = jax.random.split(self.rng)
         cache = self.pool.cache if self.mode == "warm" else None
 
+        # per-stage tick timing (docs/observability.md): admission + k-
+        # schedule prep, then either the breakdown stages (forward /
+        # sampling / host_sync) or the fused-tick split (dispatch = host
+        # time building + enqueueing the XLA call, device_sync = wait on
+        # results — the pair that attributes the megatick host-overhead
+        # gap), and finally the commit loop.  Costs a handful of
+        # perf_counter reads; stage values only leave the tick via
+        # ``obs``/breakdown metrics.
+        stages: Dict[str, float] = {}
         t0 = time.perf_counter()
+        stages["host_prep"] = t0 - t_enter
         if self.breakdown:
             feats, new_cache = self._fwd_fn(
                 self.params, self.x, self.kv_valid, bs_vec, cache,
@@ -389,20 +420,27 @@ class ServingEngine:
             jax.block_until_ready(feats)
             t1 = time.perf_counter()
             self.metrics.record_stage("forward", t1 - t0)
+            stages["forward"] = t1 - t0
             # feats = pre-head hidden states for head-capable models: the
             # sampling stage owns the LM head (the paper's Fig. 1 split
             # charges vocab traffic to sampling, not the model forward)
             x_new, conf_min, masks_left = self._smp_fn(
                 self.params, feats, self.x, bs_vec, k_vec, srng)
             jax.block_until_ready(x_new)
-            self.metrics.record_stage("sampling", time.perf_counter() - t1)
+            t2 = time.perf_counter()
+            self.metrics.record_stage("sampling", t2 - t1)
+            stages["sampling"] = t2 - t1
         else:
             x_new, new_cache, conf_min, masks_left = self._tick_fn(
                 self.params, self.x, self.kv_valid, bs_vec, k_vec, srng,
                 cache, **self.fwd_kw)
+            t2 = time.perf_counter()
+            stages["dispatch"] = t2 - t0
         conf_np = np.asarray(conf_min)        # device sync point
         masks_np = np.asarray(masks_left)
-        dt = time.perf_counter() - t0
+        t3 = time.perf_counter()
+        stages["host_sync" if self.breakdown else "device_sync"] = t3 - t2
+        dt = t3 - t0
         self.x = x_new
         if self.mode == "warm":
             self.pool.update(new_cache)
@@ -411,6 +449,8 @@ class ServingEngine:
         self.now += dt
         self.ticks_total += 1
         self.metrics.record_tick(dt, n_active)
+        t4 = time.perf_counter()
+        committed_total = 0
         x_host: Optional[np.ndarray] = None
         for i, s in enumerate(self.slots):
             if s is None:
@@ -419,6 +459,7 @@ class ServingEngine:
             uid = s.request.uid
             cb = self._commit_cbs.get(uid)
             masks_left = int(masks_np[i])
+            committed_total += max(0, s.block_masks_left - masks_left)
             # host copy only when someone will read it: a streaming diff,
             # or a request completing this tick (release needs the row);
             # intermediate block boundaries without callbacks stay on
@@ -440,10 +481,19 @@ class ServingEngine:
             if not s.first_commit and masks_left < L:
                 s.first_commit = True
                 self.metrics.request_first_commit(uid, self.now)
+                if obs is not None:
+                    obs.request_first_commit(
+                        uid, max(0.0, self.now - s.request.arrival_time))
             block_idx, step_in_block = s.block_idx, s.step_in_block
             done = False
             final: Optional[np.ndarray] = None
             if masks_left == 0:               # block fully committed
+                if obs is not None:
+                    obs.block_committed(
+                        uid, block_idx, self.ticks_total,
+                        len(positions) if positions is not None
+                        else s.block_masks_left,
+                        positions, tokens)
                 s.block_idx += 1
                 s.step_in_block = 0
                 s.last_conf = float("-inf")
@@ -465,6 +515,18 @@ class ServingEngine:
                     masks_left=masks_left, done=done, final_tokens=final))
                 if done:
                     del self._commit_cbs[uid]
+        stages["commit"] = time.perf_counter() - t4
+        for name, s_sec in stages.items():
+            if name not in ("forward", "sampling"):   # recorded in-branch
+                self.metrics.record_stage(name, s_sec)
+        if obs is not None:
+            obs.tokens_committed(committed_total)
+            ee = getattr(self.policy, "early_exits", 0)
+            if ee > self._early_exits_seen:
+                obs.policy_early_exit(ee - self._early_exits_seen)
+                self._early_exits_seen = ee
+            obs.tick(stages, dt, self.active_slots, len(self.queue),
+                     t_start_us=t_enter * 1e6)
         return True
 
     def run(self, requests: Optional[Sequence[Request]] = None

@@ -48,7 +48,7 @@ async def _read_headers(reader) -> int:
             return status
 
 
-async def get_json(url: str, path: str) -> dict:
+async def get_text(url: str, path: str) -> str:
     reader, writer = await _open(url)
     host = urllib.parse.urlsplit(url).netloc
     writer.write((f"GET {path} HTTP/1.1\r\nHost: {host}\r\n"
@@ -59,7 +59,25 @@ async def get_json(url: str, path: str) -> dict:
     writer.close()
     if status != 200:
         raise RuntimeError(f"GET {path} -> {status}: {body[:200]!r}")
-    return json.loads(body)
+    return body.decode("utf-8")
+
+
+async def get_json(url: str, path: str) -> dict:
+    return json.loads(await get_text(url, path))
+
+
+async def scrape_metrics(url: str) -> dict:
+    """One ``/metrics`` scrape, parsed and schema-checked.  Returns
+    ``{series: {labels: value}}`` (repro.obs.parse_exposition); raises on
+    HTTP errors or malformed exposition."""
+    from repro.obs import parse_exposition, validate_histogram
+    parsed = parse_exposition(await get_text(url, "/metrics"))
+    for name in ("dllm_tick_seconds", "dllm_request_latency_seconds"):
+        samples = {k: v for k, v in parsed.items()
+                   if k.startswith(name)}
+        if samples:
+            validate_histogram(samples, name)
+    return parsed
 
 
 async def complete(url: str, prompt_ids: List[int], max_tokens: int,
@@ -163,7 +181,8 @@ async def run_load(url: str, *, rate: float = 50.0, n_requests: int = 32,
                    prompt_len: int = 16, max_tokens: int = 16,
                    seed: int = 0, stream: bool = True,
                    trace: Optional[List[dict]] = None,
-                   window_s: Optional[float] = None) -> dict:
+                   window_s: Optional[float] = None,
+                   scrape: bool = False) -> dict:
     """Fire the workload and aggregate client-side percentiles.
 
     Poisson mode draws exponential inter-arrivals at ``rate`` req/s;
@@ -214,7 +233,23 @@ async def run_load(url: str, *, rate: float = 50.0, n_requests: int = 32,
         row["end_s"] = time.perf_counter() - t0
         return row
 
-    rows = await asyncio.gather(*[fire(i) for i in range(n)])
+    # mid-run /metrics scrape (--scrape-metrics): proves the endpoint
+    # serves a parseable exposition *while* worker threads are ticking,
+    # and that counters only move forward between scrapes (the CI
+    # serve-stream job gates on this through benchmarks/serve_stream.py)
+    scrape_mid: Optional[dict] = None
+
+    async def scraper() -> Optional[dict]:
+        await asyncio.sleep(max(0.05, arrivals[-1] / 2 if arrivals else 0))
+        return await scrape_metrics(url)
+
+    tasks = [fire(i) for i in range(n)]
+    if scrape:
+        mid_task = asyncio.ensure_future(scraper())
+        rows = await asyncio.gather(*tasks)
+        scrape_mid = await mid_task
+    else:
+        rows = await asyncio.gather(*tasks)
     duration = max((r["end_s"] for r in rows), default=0.0)
     ok = [r for r in rows if r["status"] == "ok"]
     shed = [r for r in rows if r["status"] == "shed"]
@@ -228,7 +263,7 @@ async def run_load(url: str, *, rate: float = 50.0, n_requests: int = 32,
         good_denom = duration
     offered_rps = (n / arrivals[-1] if arrivals and arrivals[-1] > 0
                    else float(rate))
-    return {
+    out = {
         "n_requests": n,
         "offered_rps": offered_rps,
         "completed": len(ok),
@@ -247,6 +282,41 @@ async def run_load(url: str, *, rate: float = 50.0, n_requests: int = 32,
         "latency_p50_s": _pctl([r["latency_s"] for r in ok], 50),
         "latency_p99_s": _pctl([r["latency_s"] for r in ok], 99),
         "ticks_monotone": all(r.get("ticks_monotone", True) for r in ok),
+    }
+    if scrape:
+        out["metrics"] = await _metrics_report(url, scrape_mid)
+    return out
+
+
+def _counter_total(parsed: dict, series: str) -> float:
+    return sum(parsed.get(series, {}).values())
+
+
+async def _metrics_report(url: str, mid: Optional[dict]) -> dict:
+    """Final scrape vs the mid-run one: exposition parses, counters are
+    monotone, and the core series exist with per-replica labels."""
+    end = await scrape_metrics(url)
+    counters = [s for s in end if s.endswith("_total")]
+    monotone = all(
+        end.get(s, {}).get(lbl, 0.0) >= v - 1e-9
+        for s in counters if mid and s in mid
+        for lbl, v in mid[s].items())
+    replicas = {lbl for lbl in end.get("dllm_ticks_total", {})}
+    return {
+        "scrapes": 2 if mid is not None else 1,
+        "series": len(end),
+        "counters_monotone": bool(monotone),
+        "replica_series": sorted(replicas),
+        "ticks_total": _counter_total(end, "dllm_ticks_total"),
+        "tokens_committed_total":
+            _counter_total(end, "dllm_tokens_committed_total"),
+        "requests_completed_total": sum(
+            v for lbl, v in end.get("dllm_requests_total", {}).items()
+            if 'event="completed"' in lbl),
+        "stage_series": sorted({
+            lbl for lbl in end.get("dllm_tick_stage_seconds_count", {})}),
+        "drift": {lbl: v
+                  for lbl, v in end.get("dllm_drift_ratio", {}).items()},
     }
 
 
@@ -268,6 +338,10 @@ def main(argv=None) -> None:
                     help="fixed-window mode: offer load for this many "
                          "seconds; goodput counts only in-window "
                          "completions (see run_load)")
+    ap.add_argument("--scrape-metrics", action="store_true",
+                    help="scrape /metrics mid-run and at the end; the "
+                         "report gains a 'metrics' section (parse + "
+                         "monotonicity checks)")
     args = ap.parse_args(argv)
     trace = None
     if args.trace:
@@ -277,7 +351,7 @@ def main(argv=None) -> None:
         args.url, rate=args.rate, n_requests=args.requests,
         prompt_len=args.prompt_len, max_tokens=args.max_tokens,
         seed=args.seed, stream=not args.no_stream, trace=trace,
-        window_s=args.window))
+        window_s=args.window, scrape=args.scrape_metrics))
     print(json.dumps(report, indent=2))
 
 

@@ -60,9 +60,19 @@ class EngineWorker:
     def __init__(self, engine: ServingEngine, name: str = "replica-0",
                  max_queue: Optional[int] = None,
                  max_queue_wait: Optional[float] = None,
-                 tick_floor_s: Optional[float] = None):
+                 tick_floor_s: Optional[float] = None,
+                 profile_ticks: int = 0,
+                 profile_dir: Optional[str] = None):
         self.engine = engine
         self.name = name
+        # --profile-ticks N: wrap the first N productive ticks of this
+        # replica in a jax.profiler device trace (TensorBoard/Perfetto dump
+        # under profile_dir/<name>); 0 disables.  Best-effort: profiler
+        # backends are optional, failures log and disable.
+        self.profile_ticks = int(profile_ticks)
+        self.profile_dir = profile_dir or "/tmp/dllm-profile"
+        self._profiled = 0
+        self._profiling = False
         self.max_queue = (2 * engine.num_slots if max_queue is None
                           else max_queue)
         if self.max_queue < 0:
@@ -150,12 +160,49 @@ class EngineWorker:
             self._thread.join(timeout)
 
     def stats(self) -> dict:
-        return {"name": self.name, "accepting": self.accepting,
-                "queued": self.queued, "active": self.active,
-                "free_slots": self.free_slots, "completed": self.completed,
-                "shed": self.shed_count, "max_queue": self.max_queue}
+        eng = self.engine
+        out = {"name": self.name, "accepting": self.accepting,
+               "queued": self.queued, "active": self.active,
+               "free_slots": self.free_slots, "completed": self.completed,
+               "shed": self.shed_count, "max_queue": self.max_queue,
+               "kv_valid_uploads": eng.kv_valid_uploads,
+               # summary() snapshots defensively, so scraping it from the
+               # event-loop thread mid-tick is safe (serving/metrics.py)
+               "metrics": eng.metrics.summary()}
+        if eng.obs is not None and eng.obs.drift is not None:
+            out["drift"] = eng.obs.drift_report()
+        return out
 
     # -- worker thread ------------------------------------------------------
+
+    def _profile_start(self) -> None:
+        if self._profiling or self._profiled >= self.profile_ticks:
+            return
+        try:
+            import os
+
+            import jax
+            d = os.path.join(self.profile_dir, self.name)
+            os.makedirs(d, exist_ok=True)
+            jax.profiler.start_trace(d)
+            self._profiling = True
+        except Exception as e:                      # profiler is optional
+            print(f"[{self.name}] jax.profiler unavailable: {e}")
+            self.profile_ticks = 0
+
+    def _profile_stop_if_done(self, force: bool = False) -> None:
+        if not self._profiling:
+            return
+        if force or self._profiled >= self.profile_ticks:
+            try:
+                import jax
+                jax.profiler.stop_trace()
+                print(f"[{self.name}] wrote jax.profiler trace for "
+                      f"{self._profiled} ticks to "
+                      f"{self.profile_dir}/{self.name}")
+            except Exception as e:
+                print(f"[{self.name}] jax.profiler stop failed: {e}")
+            self._profiling = False
 
     def _on_commit(self, deliver: Callable, ev: CommitEvent) -> None:
         if ev.done:
@@ -218,8 +265,14 @@ class EngineWorker:
                 # requests (stamped with real arrival times) would look
                 # like future arrivals to _admit() and starve the slots
                 eng.now = max(eng.now, self.now_rel())
+                if self.profile_ticks:
+                    self._profile_start()
                 t_tick = time.perf_counter()
                 progressed = eng.tick()
+                if self._profiling:
+                    if progressed:
+                        self._profiled += 1
+                    self._profile_stop_if_done()
                 if progressed and self.tick_floor_s:
                     rem = self.tick_floor_s - (time.perf_counter() - t_tick)
                     if rem > 0:
@@ -264,6 +317,7 @@ class EngineWorker:
                 if idle:
                     self._wake.wait(timeout=0.1)
                 self._wake.clear()
+        self._profile_stop_if_done(force=True)
         eng.metrics.elapsed = eng.now
 
 

@@ -9,7 +9,12 @@ Endpoints:
                          arrive confidence-ordered, not left-to-right.
   GET  /v1/models        model + engine geometry (loadgen reads vocab,
                          block_length, max_seq_len from here)
-  GET  /v1/stats         router + per-replica load/shed counters
+  GET  /v1/stats         router + per-replica load/shed counters, engine
+                         metrics summaries (per-stage seconds, shed,
+                         kv_valid_uploads) and drift reports
+  GET  /metrics          Prometheus text exposition (repro.obs registry:
+                         per-replica tick/stage histograms, request
+                         lifecycle counters, drift gauges)
   GET  /healthz          liveness
 
 The server owns no engine state: requests go through the
@@ -28,6 +33,8 @@ import json
 import time
 from typing import Optional, Set
 
+from repro.obs import CONTENT_TYPE as _METRICS_CT
+from repro.obs import ServingObs, frontend_metrics
 from repro.serving.engine import CommitEvent, Request
 from repro.serving.frontend import protocol
 from repro.serving.frontend.router import Overloaded, Router, ShedEvent
@@ -46,12 +53,21 @@ class ServeFrontend:
     """
 
     def __init__(self, router: Router, *, model_name: str,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0,
+                 obs: Optional[ServingObs] = None):
         self.router = router
         self.model_name = model_name
         self.host = host
         self.port = port                 # 0 -> ephemeral, resolved in start
         eng = router.workers[0].engine
+        # share the engines' obs root when build_frontend wired one (any
+        # replica view reaches the shared registry/trace); otherwise make a
+        # standalone registry so /metrics always answers
+        if obs is None:
+            obs = eng.obs if eng.obs is not None else ServingObs()
+        self.obs = obs
+        self._http, self._submits, self._overloaded = frontend_metrics(
+            obs.registry)
         self.block_length = eng.dcfg.block_length
         self.max_seq_len = min(w.engine.max_seq_len for w in router.workers)
         self.vocab = int(eng.model.cfg.vocab)
@@ -64,6 +80,9 @@ class ServeFrontend:
     @property
     def url(self) -> str:
         return f"http://{self.host}:{self.port}"
+
+    def _count(self, route: str, code: int) -> None:
+        self._http.inc(route=route, code=str(code))
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -158,11 +177,13 @@ class ServeFrontend:
             body = await reader.readexactly(n)
 
         if method == "GET" and path == "/healthz":
+            self._count("/healthz", 200)
             writer.write(protocol.json_response(200, {
                 "status": "ok", "model": self.model_name,
                 "replicas": len(self.router.workers),
                 "load": self.router.load}))
         elif method == "GET" and path == "/v1/models":
+            self._count("/v1/models", 200)
             writer.write(protocol.json_response(200, {
                 "object": "list",
                 "data": [{
@@ -175,10 +196,19 @@ class ServeFrontend:
                                      for w in self.router.workers),
                 }]}))
         elif method == "GET" and path == "/v1/stats":
+            self._count("/v1/stats", 200)
             writer.write(protocol.json_response(200, self.router.stats()))
+        elif method == "GET" and path == "/metrics":
+            self._count("/metrics", 200)
+            writer.write(protocol.http_response(
+                200, self.obs.registry.expose().encode("utf-8"),
+                content_type=_METRICS_CT))
         elif method == "POST" and path == "/v1/completions":
             await self._completions(writer, body)
         else:
+            # unknown paths collapse to one label: client-chosen strings
+            # must not mint unbounded metric label values
+            self._count("other", 404 if method in ("GET", "POST") else 405)
             writer.write(protocol.json_response(
                 404 if method in ("GET", "POST") else 405,
                 protocol.error_payload("not_found",
@@ -199,6 +229,7 @@ class ServeFrontend:
                 payload, block_length=self.block_length,
                 max_seq_len=self.max_seq_len, vocab=self.vocab)
         except protocol.BadRequest as e:
+            self._count("/v1/completions", 400)
             writer.write(protocol.json_response(
                 400, protocol.error_payload("bad_request", str(e))))
             return
@@ -212,8 +243,15 @@ class ServeFrontend:
             loop.call_soon_threadsafe(events.put_nowait, ev)
 
         try:
-            self.router.submit(req, deliver)
+            # router hop: which replica took the request, and how long the
+            # pick + stage took (spans land on the event-loop thread lane)
+            with self.obs.trace.span("router.submit", cat="router",
+                                     args={"uid": uid}):
+                worker = self.router.submit(req, deliver)
+            self._submits.inc(replica=worker.name)
         except Overloaded as e:
+            self._overloaded.inc()
+            self._count("/v1/completions", 429)
             writer.write(protocol.json_response(
                 429, protocol.error_payload("overloaded", str(e))))
             return
@@ -228,6 +266,7 @@ class ServeFrontend:
 
     async def _stream_response(self, writer, events, uid: int,
                                prompt_len: int, t0: float) -> None:
+        self._count("/v1/completions", 200)
         writer.write(protocol.sse_headers())
         await writer.drain()
         ttft: Optional[float] = None
@@ -266,6 +305,7 @@ class ServeFrontend:
         while True:
             ev = await events.get()
             if isinstance(ev, ShedEvent):
+                self._count("/v1/completions", 429)
                 writer.write(protocol.json_response(
                     429, protocol.error_payload("overloaded", ev.reason)))
                 return
@@ -273,6 +313,7 @@ class ServeFrontend:
             if ttft is None and len(ev.positions):
                 ttft = time.perf_counter() - t0
             if ev.done:
+                self._count("/v1/completions", 200)
                 writer.write(protocol.json_response(
                     200, protocol.completion_payload(
                         uid, self.model_name, prompt_len, ev.final_tokens,
@@ -289,31 +330,63 @@ def build_frontend(model, params, dcfg, *, model_name: str,
                    tick_floor_s: Optional[float] = None,
                    policy=None, mesh=None, host: str = "127.0.0.1",
                    port: int = 0, seed: int = 0,
-                   warmup: bool = True) -> ServeFrontend:
+                   warmup: bool = True,
+                   obs: Optional[ServingObs] = None,
+                   breakdown: bool = False,
+                   drift: bool = True,
+                   profile_ticks: int = 0,
+                   profile_dir: Optional[str] = None) -> ServeFrontend:
     """Wire engines -> workers -> router -> frontend.  One independent
     engine per replica (each with its own slot pool, rng chain, and tick
     thread; params are shared read-only, and the jitted tick executable is
-    shared through the get_tick_fn cache)."""
+    shared through the get_tick_fn cache).
+
+    Observability: ``obs`` (default: a fresh :class:`ServingObs` root) is
+    fanned out as per-replica labeled views, so one ``/metrics`` scrape
+    covers every replica.  ``breakdown=True`` splits the tick into jitted
+    forward/sampling stages so the per-stage histograms and the drift
+    monitor see the paper's Fig. 1 split; ``drift=True`` arms each replica
+    with the sim/analytical per-tick stage prediction for this exact
+    model/serving config.  ``profile_ticks=N`` wraps the first N ticks of
+    each replica in a jax.profiler device trace under ``profile_dir``.
+    """
     import jax
 
     from repro.serving.engine import ServingEngine
     from repro.serving.frontend.router import EngineWorker
 
+    if obs is None:
+        obs = ServingObs()
+    modeled = None
+    if drift:
+        try:
+            from repro.obs.drift import modeled_tick_stages
+            modeled = modeled_tick_stages(
+                model.cfg, dcfg, batch=num_slots,
+                prompt_len=max(1, max_seq_len - dcfg.gen_length))
+        except Exception as e:          # model outside analytical coverage
+            print(f"drift monitor disabled (no analytical model): {e}")
     workers = []
     for i in range(replicas):
+        rep_obs = obs.for_replica(f"replica-{i}")
+        if modeled is not None:
+            rep_obs.set_drift_model(modeled)
         eng = ServingEngine(model, params, dcfg, num_slots=num_slots,
                             max_seq_len=max_seq_len, mode=mode,
                             policy=policy, mesh=mesh,
-                            rng=jax.random.PRNGKey(seed + i))
+                            rng=jax.random.PRNGKey(seed + i),
+                            breakdown=breakdown, obs=rep_obs)
         if warmup:
             eng.warmup()              # compile off-clock, before accepting
         workers.append(EngineWorker(eng, name=f"replica-{i}",
                                     max_queue=max_queue,
                                     max_queue_wait=max_queue_wait,
-                                    tick_floor_s=tick_floor_s))
+                                    tick_floor_s=tick_floor_s,
+                                    profile_ticks=profile_ticks,
+                                    profile_dir=profile_dir))
     router = Router(workers, strategy=strategy)
     return ServeFrontend(router, model_name=model_name, host=host,
-                         port=port)
+                         port=port, obs=obs)
 
 
 async def serve_forever(frontend: ServeFrontend) -> None:

@@ -117,14 +117,22 @@ class MetricsTracker:
     # -- aggregation --------------------------------------------------------
 
     def summary(self) -> dict:
-        done = [r for r in self.requests.values() if r.completed is not None]
-        shed = [r for r in self.requests.values() if r.shed is not None]
+        # summary() is scraped from the HTTP thread while a worker thread
+        # ticks: snapshot shared containers with C-atomic list()/dict()
+        # copies, and truncate the two tick lists to their common length
+        # (record_tick appends them one at a time, so a scrape can land
+        # between the appends)
+        records = list(self.requests.values())
+        done = [r for r in records if r.completed is not None]
+        shed = [r for r in records if r.shed is not None]
         lat = np.array([r.latency for r in done]) if done else np.zeros(0)
         wait = np.array([r.queue_wait for r in done]) if done else np.zeros(0)
         ttfts = [r.ttft for r in done if r.first_commit is not None]
         ttft = np.array(ttfts) if ttfts else np.zeros(0)
-        tick_s = np.array(self._tick_s)
-        active = np.array(self._tick_active, dtype=np.float64)
+        raw_s, raw_a = list(self._tick_s), list(self._tick_active)
+        n = min(len(raw_s), len(raw_a))
+        tick_s = np.array(raw_s[:n])
+        active = np.array(raw_a[:n], dtype=np.float64)
         busy = float(tick_s.sum()) + self._folded_busy
         tokens = sum(r.gen_tokens for r in done) + self._folded_tokens
         active_s = float((active * tick_s).sum()) + self._folded_active_s
@@ -158,8 +166,9 @@ class MetricsTracker:
             "latency_p99_s": float(np.percentile(lat, 99)) if done else 0.0,
             "queue_wait_p50_s": float(np.percentile(wait, 50)) if done else 0.0,
         }
-        total_stage = sum(self.stage_s.values())
-        for name, s in sorted(self.stage_s.items()):
+        stage_s = dict(self.stage_s)
+        total_stage = sum(stage_s.values())
+        for name, s in sorted(stage_s.items()):
             out[f"stage_{name}_s"] = s
             if total_stage > 0:
                 out[f"stage_{name}_frac"] = s / total_stage

@@ -18,6 +18,9 @@ class Policy:
     """Base policy: FIFO admission, paper-faithful linear step schedule."""
 
     name = "base"
+    # lifetime count of whole-block early exits taken by step_k; the
+    # engine diffs this per tick into dllm_policy_early_exits_total
+    early_exits = 0
 
     def select(self, queue: Sequence, now: float) -> int:
         """Index into ``queue`` of the request to admit next."""
@@ -55,12 +58,15 @@ class SlowFastPolicy(Policy):
     """
 
     threshold: float = 0.9
+    early_exits: int = 0
     name = "slowfast"
 
     def step_k(self, slot, default_k: int) -> int:
         if (slot.step_in_block > 0 and slot.block_masks_left > 0
                 and slot.last_conf >= self.threshold
                 and math.isfinite(slot.last_conf)):
+            if slot.block_masks_left > default_k:
+                self.early_exits += 1
             return slot.block_masks_left
         return default_k
 

@@ -14,6 +14,18 @@ GOOD_FUSED = {
                              "ratio_vs_legacy": 61.0},
 }
 
+def _scrape(n_replicas, completed):
+    reps = [f'{{replica="replica-{i}"}}' for i in range(n_replicas)]
+    stages = [f'{{replica="replica-{i}",stage="{s}"}}'
+              for i in range(n_replicas)
+              for s in ("host_prep", "dispatch", "device_sync", "commit")]
+    return {"scrapes": 2, "series": 40, "counters_monotone": True,
+            "replica_series": reps, "stage_series": stages,
+            "ticks_total": 500.0, "tokens_committed_total": 1000.0,
+            "requests_completed_total": float(completed),
+            "drift": reps}
+
+
 GOOD_SERVE = {
     "benchmark": "serve_stream",
     "parity": {"stream_matches_generate": True,
@@ -24,10 +36,23 @@ GOOD_SERVE = {
         "host_cpus": 2,
         "unpaced": {"goodput_ratio_2x": 0.9},
         "one_replica": {"shed_rate": 0.6, "errors": 0, "completed": 70,
-                        "ticks_monotone": True},
+                        "ticks_monotone": True,
+                        "metrics": _scrape(1, 70)},
         "two_replicas": {"shed_rate": 0.2, "errors": 0, "completed": 140,
-                         "ticks_monotone": True},
+                         "ticks_monotone": True,
+                         "metrics": _scrape(2, 140)},
     },
+}
+
+GOOD_OBS = {
+    "benchmark": "obs_overhead",
+    "hook_frac": {"metrics": 0.009, "trace": 0.014},
+    "hook_gate": 0.02,
+    "overhead": {"metrics": 0.016, "trace": -0.012},
+    "ab_gate": 0.10,
+    "drift_band": [0.05, 20.0],
+    "drift_in_band": {"tick": True, "host_prep": True},
+    "drift": {"drift": {"tick": 1.0, "host_prep": None}},
 }
 
 GOOD_CYCLE = {
@@ -53,12 +78,15 @@ def _write(tmp_path, name, payload):
 def test_pass_on_good_payloads(tmp_path, capsys):
     files = [_write(tmp_path, "BENCH_fused_head.json", GOOD_FUSED),
              _write(tmp_path, "BENCH_cycle_sim.json", GOOD_CYCLE),
-             _write(tmp_path, "BENCH_serve_stream.json", GOOD_SERVE)]
+             _write(tmp_path, "BENCH_serve_stream.json", GOOD_SERVE),
+             _write(tmp_path, "BENCH_obs_overhead.json", GOOD_OBS)]
     assert check_bench.main(files) == 0
     out = capsys.readouterr().out
     assert "all checks passed" in out
     assert "crossval_fused" in out
     assert "goodput_ratio_2x" in out
+    assert "metrics_monotone_2r" in out
+    assert "hook_frac_trace" in out
 
 
 def test_serve_stream_gates(tmp_path):
@@ -80,6 +108,49 @@ def test_serve_stream_gates(tmp_path):
     ok["load"]["unpaced"]["goodput_ratio_2x"] = 0.5
     assert check_bench.main(
         [_write(tmp_path, "BENCH_serve_stream.json", ok)]) == 0
+
+
+def test_serve_stream_metrics_scrape_gates(tmp_path):
+    for mutate in (
+        # a payload without the scrape section at all is a regression
+        lambda b: b["load"]["one_replica"].pop("metrics"),
+        lambda b: b["load"]["one_replica"]["metrics"].__setitem__(
+            "counters_monotone", False),
+        # a 2-replica run whose scrape only shows one replica's series
+        lambda b: b["load"]["two_replicas"]["metrics"].__setitem__(
+            "replica_series", ['{replica="replica-0"}']),
+        # server-side completed counter below client-confirmed completions
+        lambda b: b["load"]["two_replicas"]["metrics"].__setitem__(
+            "requests_completed_total", 10.0),
+        lambda b: b["load"]["one_replica"]["metrics"].__setitem__(
+            "stage_series", ['{replica="replica-0",stage="commit"}']),
+    ):
+        bad = json.loads(json.dumps(GOOD_SERVE))
+        mutate(bad)
+        assert check_bench.main(
+            [_write(tmp_path, "BENCH_serve_stream.json", bad)]) == 1
+    # drift series count is informational only
+    ok = json.loads(json.dumps(GOOD_SERVE))
+    ok["load"]["one_replica"]["metrics"]["drift"] = []
+    assert check_bench.main(
+        [_write(tmp_path, "BENCH_serve_stream.json", ok)]) == 0
+
+
+def test_obs_overhead_gates(tmp_path):
+    assert check_bench.main(
+        [_write(tmp_path, "BENCH_obs_overhead.json", GOOD_OBS)]) == 0
+    for mutate in (
+        # the documented <2% hook-cost claim
+        lambda b: b["hook_frac"].__setitem__("trace", 0.031),
+        lambda b: b["hook_frac"].__setitem__("metrics", 0.025),
+        # A/B backstop: an accidental device sync shows up at ms scale
+        lambda b: b["overhead"].__setitem__("trace", 0.4),
+        lambda b: b["drift_in_band"].__setitem__("tick", False),
+    ):
+        bad = json.loads(json.dumps(GOOD_OBS))
+        mutate(bad)
+        assert check_bench.main(
+            [_write(tmp_path, "BENCH_obs_overhead.json", bad)]) == 1
 
 
 def test_fail_on_parity_regression(tmp_path, capsys):
@@ -143,7 +214,9 @@ def test_gate_passes_on_freshly_emitted_real_jsons():
     """If the repo-level smoke benchmarks have produced BENCH files, the
     real gate must accept them (covers schema drift)."""
     files = [f for f in ("BENCH_fused_head.json", "BENCH_cycle_sim.json",
-                         "BENCH_sharded_tick.json") if os.path.exists(f)]
+                         "BENCH_sharded_tick.json",
+                         "BENCH_serve_stream.json",
+                         "BENCH_obs_overhead.json") if os.path.exists(f)]
     if not files:
         pytest.skip("no emitted BENCH_*.json in cwd")
     assert check_bench.main(files) == 0
