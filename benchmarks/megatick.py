@@ -1,0 +1,200 @@
+"""Megatick dispatch-amortization: host overhead per committed token vs K.
+
+Measures the tentpole claim of docs/megatick.md directly: fusing K engine
+ticks into one on-device ``lax.while_loop`` megastep pays one dispatch +
+one ``block_until_ready`` per megastep instead of per tick, so the host
+overhead charged to every committed token shrinks ~1/K.
+
+Two halves:
+
+* **overhead sweep** — a deliberately tiny 1-layer model (host dispatch
+  dominates device compute, the regime the ISSUE's BENCH_sharded_tick gap
+  measurement identified) served at K in {1, 4, 16}; reports the
+  dispatch+device_sync seconds per committed token, the K=16 reduction vs
+  K=1 (gated >= 2x in check_bench), and the measured tick-rate ratio.
+* **parity** — the smoke LLaDA config on (1, 1) and (2, 2) debug meshes:
+  greedy tokens *and* streamed ``block_committed`` event sequences must be
+  bit-identical between K=1 and megatick engines (gated; the (2, 2) shape
+  degrades to None when the process lacks forced host devices).
+
+Emits BENCH_megatick.json.
+
+    PYTHONPATH=src python -m benchmarks.megatick [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+# must precede any jax import: the (2, 2) parity mesh needs >= 4 devices
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import jax                                                      # noqa: E402
+import numpy as np                                              # noqa: E402
+
+from benchmarks.common import Row                               # noqa: E402
+
+SMOKE = "--smoke" in sys.argv
+SEED = 0
+K_SWEEP = (1, 4, 16)
+PARITY_MESHES = ((1, 1), (2, 2))
+
+
+def _engine_run(model, params, dcfg, *, megatick_k, mesh=None, n_reqs=4,
+                prompt_len=8, num_slots=2, sinks=False, seed=SEED):
+    """One warmed engine pass; returns (engine, completed, block_events,
+    wall_s)."""
+    from repro.obs import ServingObs, TraceCollector
+    from repro.serving import Request, ServingEngine
+
+    obs = ServingObs(trace=TraceCollector(enabled=sinks))
+    eng = ServingEngine(model, params, dcfg, num_slots=num_slots,
+                        max_seq_len=prompt_len + dcfg.gen_length,
+                        mode="none", mesh=mesh,
+                        rng=jax.random.PRNGKey(7), obs=obs,
+                        megatick_k=megatick_k)
+    rs = np.random.RandomState(seed)
+    events = []
+    for i in range(n_reqs):
+        prompt = rs.randint(0, model.cfg.vocab - 2,
+                            size=(prompt_len,)).astype(np.int32)
+        eng.submit(Request(uid=1 + i, prompt=prompt,
+                           gen_length=dcfg.gen_length),
+                   on_commit=events.append if sinks else None)
+    eng.warmup()
+    t0 = time.perf_counter()
+    completed = sorted(eng.run(), key=lambda c: c.uid)
+    wall = time.perf_counter() - t0
+    blocks = [(e["id"], e["args"]) for e in obs.trace.events()
+              if e.get("name") == "block_committed"]
+    return eng, completed, blocks, wall
+
+
+def _overhead(rows: list) -> dict:
+    """Host (dispatch + device_sync) seconds per committed token at each K
+    on a micro model where the per-dispatch host tax dominates compute."""
+    from repro.core import diffusion, sampling as sampling_lib
+    from repro.core.baos import BAOSConfig
+    from repro.models.registry import build_model
+    from repro.models.transformer import ModelConfig
+
+    cfg = ModelConfig(name="micro-1l", family="dense", n_layers=1,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_head=16,
+                      d_ff=64, vocab=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+    # 16-tick trajectories so one K=16 megastep can swallow a whole request
+    dcfg = diffusion.DiffusionConfig(
+        gen_length=16, block_length=8, steps_per_block=8, cache_mode="none",
+        sampling=sampling_lib.SamplingConfig(),
+        baos=BAOSConfig(enabled=False))
+    n_reqs = 4 if SMOKE else 8
+    points = []
+    ref_toks = None
+    parity = True
+    for k in K_SWEEP:
+        # sinks on: the streaming-serving regime the megatick targets —
+        # K=1 pays the per-tick mask-mirror canvas fetch, the megastep
+        # drains one (K, B, L) commit buffer instead
+        eng, completed, _, wall = _engine_run(model, params, dcfg,
+                                              megatick_k=k, n_reqs=n_reqs,
+                                              sinks=True)
+        toks = [tuple(int(t) for t in c.tokens) for c in completed]
+        if ref_toks is None:
+            ref_toks = toks
+        parity &= toks == ref_toks
+        s = eng.metrics.summary()
+        host_s = s.get("stage_dispatch_s", 0.0) \
+            + s.get("stage_device_sync_s", 0.0)
+        n_tok = sum(c.gen_length for c in completed)
+        points.append({"k": k, "ticks": eng.ticks_total,
+                       "committed_tokens": n_tok,
+                       "dispatch_s": s.get("stage_dispatch_s", 0.0),
+                       "device_sync_s": s.get("stage_device_sync_s", 0.0),
+                       "host_s_per_token": host_s / max(n_tok, 1),
+                       "ticks_per_s": eng.ticks_total / wall,
+                       "host_syncs_elided": eng.host_syncs_elided})
+        rows.append((f"megatick/host_us_per_token_k{k}",
+                     points[-1]["host_s_per_token"] * 1e6,
+                     f"elided={eng.host_syncs_elided}"))
+    by_k = {p["k"]: p for p in points}
+    reduction = (by_k[1]["host_s_per_token"]
+                 / max(by_k[16]["host_s_per_token"], 1e-12))
+    tick_ratio = by_k[16]["ticks_per_s"] / max(by_k[1]["ticks_per_s"], 1e-12)
+    rows.append(("megatick/host_overhead_reduction_k16", 0.0,
+                 f"{reduction:.2f}x"))
+    rows.append(("megatick/tick_rate_ratio_k16", 0.0, f"{tick_ratio:.2f}x"))
+    return {"model": cfg.name, "points": points,
+            "host_overhead_reduction_k16": reduction,
+            "tick_rate_ratio_k16": tick_ratio,
+            "greedy_token_parity": parity}
+
+
+def _parity(rows: list) -> dict:
+    """K=1 vs megatick engines on debug meshes: greedy tokens and streamed
+    block_committed event sequences must match bit-for-bit."""
+    from repro.configs import base
+    from repro.core import diffusion
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models.registry import build_model
+
+    cfg = base.get_config("llada-8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+    dcfg = diffusion.DiffusionConfig(gen_length=16, block_length=8,
+                                     steps_per_block=4, cache_mode="none",
+                                     head_path="fused")
+    n_dev = jax.device_count()
+    out = {}
+    for data, model_ax in PARITY_MESHES:
+        tag = f"mesh_{data}x{model_ax}"
+        if data * model_ax > n_dev:
+            out[tag] = None
+            rows.append((f"megatick/parity_{tag}", 0.0,
+                         f"SKIPPED ({n_dev} devices)"))
+            print(f"megatick: SKIPPED ({data},{model_ax}) parity — only "
+                  f"{n_dev} device(s); run standalone with XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count=8",
+                  file=sys.stderr)
+            continue
+        mesh = make_debug_mesh(data, model_ax)
+        _, ref, ref_blocks, _ = _engine_run(model, params, dcfg,
+                                            megatick_k=1, mesh=mesh,
+                                            sinks=True)
+        _, got, blocks, _ = _engine_run(model, params, dcfg,
+                                        megatick_k=4, mesh=mesh, sinks=True)
+        ok = ([tuple(int(t) for t in c.tokens) for c in ref]
+              == [tuple(int(t) for t in c.tokens) for c in got]
+              and ref_blocks == blocks and len(blocks) > 0)
+        out[tag] = bool(ok)
+        rows.append((f"megatick/parity_{tag}", 0.0, str(ok)))
+    return out
+
+
+def run() -> list:
+    rows: list[Row] = []
+    overhead = _overhead(rows)
+    parity = _parity(rows)
+    payload = {"benchmark": "megatick", "smoke": SMOKE,
+               "k_sweep": list(K_SWEEP),
+               "overhead": overhead, "parity": parity}
+    with open("BENCH_megatick.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    rows.append(("megatick/json", 0.0, "BENCH_megatick.json"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")
+    out = json.load(open("BENCH_megatick.json"))
+    assert out["overhead"]["greedy_token_parity"], "megatick tokens diverged"
+    assert out["overhead"]["host_overhead_reduction_k16"] >= 2.0, \
+        out["overhead"]["host_overhead_reduction_k16"]
+    assert out["parity"]["mesh_1x1"] is True, "mesh (1,1) parity failed"

@@ -322,7 +322,8 @@ def step(model, params, state: DiffusionState, jit_steps: bool = True,
 
 def generate(model, params, prompt: jax.Array, dcfg: DiffusionConfig,
              rng: Optional[jax.Array] = None, mask_id: Optional[int] = None,
-             jit_steps: bool = True, mesh=None, **fwd_kw) -> jax.Array:
+             jit_steps: bool = True, mesh=None, megatick_k: int = 1,
+             **fwd_kw) -> jax.Array:
     """Blocked diffusion generation (paper Alg. 2 outer loops).
 
     prompt: (B, P) int32.  Returns (B, P + gen_length) tokens.  Thin loop
@@ -330,11 +331,21 @@ def generate(model, params, prompt: jax.Array, dcfg: DiffusionConfig,
     (a (data, model) mesh; cache_mode='none' only) every step runs the
     shard_mapped SPMD tick: batch rows shard over 'data', the LM head
     columns over 'model' (docs/sharded_serving.md).
+
+    ``megatick_k > 1`` (cache_mode='none' only) fuses K denoising ticks
+    into one device-resident while_loop dispatch (docs/megatick.md); the
+    rng chain splits once per tick inside the loop, so tokens stay
+    bit-identical to the per-step path.
     """
     if mesh is not None and dcfg.cache_mode != "none":
         raise ValueError(
             "generate(mesh=...) requires cache_mode='none' (the SPMD path "
             "runs the batched tick)")
+    if megatick_k > 1:
+        return _generate_megatick(model, params, prompt, dcfg, rng=rng,
+                                  mask_id=mask_id, jit_steps=jit_steps,
+                                  mesh=mesh, megatick_k=megatick_k,
+                                  **fwd_kw)
     if mesh is not None:
         params = place_spmd_params(params, mesh)   # once, not per step
     state = init_state(model, prompt, dcfg, rng=rng, mask_id=mask_id)
@@ -342,6 +353,43 @@ def generate(model, params, prompt: jax.Array, dcfg: DiffusionConfig,
         state = step(model, params, state, jit_steps=jit_steps, mesh=mesh,
                      **fwd_kw)
     return state.x
+
+
+def _generate_megatick(model, params, prompt: jax.Array,
+                       dcfg: DiffusionConfig, *, rng, mask_id, jit_steps,
+                       mesh, megatick_k: int, **fwd_kw) -> jax.Array:
+    """generate() via the fused K-tick while_loop (docs/megatick.md): the
+    denoising tick count is static (num_blocks * steps_per_block), so the
+    host loop runs ceil(total / K) megasteps with no per-step sync at all —
+    the single block_until_ready is the final .block_until_ready() the
+    caller does on the returned tokens."""
+    if dcfg.cache_mode != "none":
+        raise ValueError(
+            "generate(megatick_k>1) requires cache_mode='none' (the "
+            "megatick is built on the uniform batched tick)")
+    quant = fwd_kw.pop("quant", None)
+    if fwd_kw:
+        raise ValueError("generate(megatick_k>1) does not support extra "
+                         f"forward kwargs: {sorted(fwd_kw)}")
+    if mesh is not None:
+        params = place_spmd_params(params, mesh)
+    mask_id = int(model.cfg.mask_id if mask_id is None else mask_id)
+    B, P = prompt.shape
+    x = jnp.concatenate(
+        [prompt.astype(jnp.int32),
+         jnp.full((B, dcfg.gen_length), mask_id, jnp.int32)], axis=1)
+    kv_valid = jnp.ones((B, P + dcfg.gen_length), bool)
+    state = megatick_state(jnp.full((B,), P, jnp.int32),
+                           jnp.full((B,), dcfg.num_blocks, jnp.int32), dcfg)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    fn = get_megatick_fn(model, dcfg, mask_id, int(megatick_k), mesh=mesh,
+                         jit_steps=jit_steps, quant=quant)
+    total = dcfg.num_blocks * dcfg.steps_per_block
+    for _ in range(-(-total // megatick_k)):
+        x, _, rng, state, _, _ = fn(params, x, kv_valid, state, rng,
+                                    jnp.int32(megatick_k),
+                                    jnp.asarray(False), None)
+    return x
 
 
 # ---------------------------------------------------------------------------
@@ -552,6 +600,206 @@ def get_spmd_tick_fn(model, dcfg: DiffusionConfig, mask_id: int, mesh,
         return f(params, x, kv_valid, block_start, k, srng, cache)
 
     return jax.jit(tick) if jit_steps else tick
+
+
+# ---------------------------------------------------------------------------
+# Device-resident megatick: K fused ticks in one lax.while_loop
+# (docs/megatick.md).  One host dispatch + one device sync per K denoising
+# ticks; per-tick commit records accumulate into fixed-size on-device
+# buffers the host drains after the megastep.
+# ---------------------------------------------------------------------------
+
+def megatick_state(prompt_len, gen_blocks, dcfg: DiffusionConfig,
+                   block_idx=None, step_in_block=None, block_masks_left=None,
+                   last_conf=None, active=None) -> dict:
+    """Per-row device state pytree carried through the megatick while_loop.
+
+    ``prompt_len``/``gen_blocks`` are (B,) int vectors (per-row prompt
+    offsets and block counts — the megatick serves mixed-length slots);
+    the remaining fields default to block-0/step-0 for every row.
+    """
+    pl = jnp.asarray(prompt_len, jnp.int32)
+    B = pl.shape[0]
+    L = dcfg.block_length
+    return {
+        "prompt_len": pl,
+        "gen_blocks": jnp.asarray(gen_blocks, jnp.int32),
+        "block_idx": (jnp.zeros((B,), jnp.int32) if block_idx is None
+                      else jnp.asarray(block_idx, jnp.int32)),
+        "step_in_block": (jnp.zeros((B,), jnp.int32) if step_in_block is None
+                          else jnp.asarray(step_in_block, jnp.int32)),
+        "block_masks_left": (jnp.full((B,), L, jnp.int32)
+                             if block_masks_left is None
+                             else jnp.asarray(block_masks_left, jnp.int32)),
+        "last_conf": (jnp.full((B,), -jnp.inf, jnp.float32)
+                      if last_conf is None
+                      else jnp.asarray(last_conf, jnp.float32)),
+        "active": (jnp.ones((B,), bool) if active is None
+                   else jnp.asarray(active, bool)),
+    }
+
+
+@functools.lru_cache(maxsize=16)
+def get_megatick_fn(model, dcfg: DiffusionConfig, mask_id: int, k_max: int,
+                    mesh=None, jit_steps: bool = True, quant=None,
+                    slowfast_threshold: Optional[float] = None):
+    """Fused K-tick megastep: ``lax.while_loop`` over the serving tick.
+
+    The loop carries canvas ``x``, KV ``cache``, the rng chain, and the
+    per-row policy state (``megatick_state``) entirely on device, splitting
+    the rng exactly as the engine's one-split-per-tick chain does — greedy
+    tokens are bit-identical to ``k_max`` single ticks (tests/test_megatick).
+    Each iteration appends one commit record to fixed-size ``(k_max, ...)``
+    buffers (post-tick active-block tokens, block offsets, masks_left,
+    per-row release/early-exit flags); the loop exits early when every
+    active row has released, when ``stop_on_release`` is set and any row
+    released this tick (the engine's queue-pressure knob: freed slots
+    should refill at the next megastep boundary), or after the *traced*
+    ``k_req <= k_max`` ticks — so one compiled executable serves every
+    requested depth up to ``k_max``.
+
+    ``slowfast_threshold`` moves SlowFastPolicy.step_k on device: once a
+    row's previous-tick min confidence clears the threshold, the rest of
+    its block commits in one tick (the ``early`` buffer records exits for
+    the host-side ``policy.early_exits`` accounting).
+
+    Returns ``(x, cache, rng, state, buffers, n_ticks)``.  The jitted
+    callable donates ``x`` and ``cache`` (the engine rebinds both every
+    megastep); under ``mesh`` the whole loop runs inside one shard_map
+    over the (data, model) mesh — the stop flag psums over 'data' in the
+    loop *body* (collectives in a while_loop cond are unsafe), so the
+    carried scalars every shard's cond reads are replicated.
+    """
+    if k_max < 1:
+        raise ValueError(f"megatick k_max must be >= 1, got {k_max}")
+    L, T = dcfg.block_length, dcfg.steps_per_block
+    thr = None if slowfast_threshold is None else float(slowfast_threshold)
+    if mesh is not None:
+        # reuse the SPMD tick's validation (mesh axes, fused+greedy head)
+        get_spmd_tick_fn(model, dcfg, mask_id, mesh, jit_steps=False,
+                         quant=quant)
+
+    def body(params, x, kv_valid, state, rng, k_req, stop_on_release,
+             cache, axis_name=None):
+        B = x.shape[0]
+        ksched = jnp.asarray(schedule_lib.linear_unmask_schedule(L, T))
+        k_req = jnp.minimum(jnp.asarray(k_req, jnp.int32), k_max)
+        zi = jnp.zeros((k_max, B), jnp.int32)
+        zb = jnp.zeros((k_max, B), bool)
+        bufs0 = {"xa": jnp.zeros((k_max, B, L), jnp.int32),
+                 "block_start": zi, "block_idx": zi, "step_in_block": zi,
+                 "masks_left": zi, "k": zi,
+                 "conf": jnp.zeros((k_max, B), jnp.float32),
+                 "active": zb, "released": zb, "early": zb}
+
+        def cond(carry):
+            i, stop = carry[0], carry[1]
+            return (i < k_req) & jnp.logical_not(stop)
+
+        def step(carry):
+            i, stop, x, cache, rng, st, bufs = carry
+            bi, t = st["block_idx"], st["step_in_block"]
+            bml, lc, act = (st["block_masks_left"], st["last_conf"],
+                            st["active"])
+            bs = jnp.where(act, st["prompt_len"] + bi * L, 0)
+            dk = jnp.where(t < T, jnp.take(ksched, jnp.clip(t, 0, T - 1)),
+                           bml)
+            if thr is not None:
+                fire = (t > 0) & (bml > 0) & jnp.isfinite(lc) & (lc >= thr)
+                k = jnp.where(fire, bml, dk)
+                early = fire & (bml > dk)
+            else:
+                k, early = dk, jnp.zeros((B,), bool)
+            k = jnp.where(act, jnp.minimum(k, L), 0)
+            rng, srng = jax.random.split(rng)
+            feats, new_cache = tick_forward(model, params, x, kv_valid, bs,
+                                            cache, dcfg, quant=quant)
+            x_new, conf_min, masks_left = tick_sample(
+                params, feats, x, bs, k, srng, dcfg, mask_id, model=model,
+                quant=quant, axis_name=axis_name)
+            boundary = act & (masks_left == 0)
+            released = boundary & (bi + 1 >= st["gen_blocks"])
+            st2 = dict(st)
+            st2["block_idx"] = jnp.where(boundary, bi + 1, bi)
+            st2["step_in_block"] = jnp.where(
+                act, jnp.where(boundary, 0, t + 1), t)
+            st2["last_conf"] = jnp.where(
+                act, jnp.where(boundary, -jnp.inf, conf_min), lc)
+            st2["block_masks_left"] = jnp.where(
+                act, jnp.where(boundary, L, masks_left), bml)
+            st2["active"] = act & jnp.logical_not(released)
+
+            def row_slice(a, s):
+                return jax.lax.dynamic_slice_in_dim(a, s, L, axis=0)
+
+            upd = {"xa": jax.vmap(row_slice)(x_new, bs), "block_start": bs,
+                   "block_idx": bi, "step_in_block": t, "conf": conf_min,
+                   "masks_left": jnp.where(act, masks_left, 0), "k": k,
+                   "active": act, "released": released, "early": early}
+            bufs = {key: jax.lax.dynamic_update_index_in_dim(
+                        bufs[key], upd[key].astype(bufs[key].dtype), i, 0)
+                    for key in bufs}
+            any_active = jnp.any(st2["active"])
+            any_released = jnp.any(released)
+            if axis_name is not None:
+                any_active = jax.lax.psum(
+                    any_active.astype(jnp.int32), "data") > 0
+                any_released = jax.lax.psum(
+                    any_released.astype(jnp.int32), "data") > 0
+            stop = (jnp.logical_not(any_active)
+                    | (stop_on_release & any_released))
+            return (i + 1, stop, x_new, new_cache, rng, st2, bufs)
+
+        carry = (jnp.int32(0), jnp.asarray(False), x, cache, rng,
+                 dict(state), bufs0)
+        i, _, x, cache, rng, st, bufs = jax.lax.while_loop(cond, step, carry)
+        return x, cache, rng, st, bufs, i
+
+    if mesh is None:
+        def megatick(params, x, kv_valid, state, rng, k_req,
+                     stop_on_release, cache=None):
+            return body(params, x, kv_valid, state, rng, k_req,
+                        stop_on_release, cache, axis_name=None)
+
+        return (jax.jit(megatick, donate_argnums=(1, 7)) if jit_steps
+                else megatick)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n_model = mesh.shape["model"]
+    n_data = mesh.shape["data"]
+
+    def megatick(params, x, kv_valid, state, rng, k_req, stop_on_release,
+                 cache=None):
+        if x.shape[0] % n_data:
+            raise ValueError(
+                f"batch {x.shape[0]} is not divisible by the data axis "
+                f"size {n_data}")
+        params = dict(params)
+        params["lm_head"] = sampling_lib.pad_head_for_mesh(
+            params["lm_head"], n_model)
+        pspec = jax.tree.map(lambda _: P(), params)
+        pspec["lm_head"] = P(None, "model")
+        cspec = jax.tree.map(lambda _: P(None, "data"), cache)
+        row = P("data")
+        sspec = {key: row for key in state}
+        bspec = {"xa": P(None, "data", None)}
+        for key in ("block_start", "block_idx", "step_in_block",
+                    "masks_left", "k", "conf", "active", "released",
+                    "early"):
+            bspec[key] = P(None, "data")
+        f = shard_map(
+            functools.partial(body, axis_name="model"), mesh=mesh,
+            in_specs=(pspec, P("data", None), P("data", None), sspec,
+                      P(), P(), P(), cspec),
+            out_specs=(P("data", None), cspec, P(), sspec, bspec, P()),
+            check_rep=False)
+        return f(params, x, kv_valid, state, rng, k_req, stop_on_release,
+                 cache)
+
+    return (jax.jit(megatick, donate_argnums=(1, 7)) if jit_steps
+            else megatick)
 
 
 @functools.lru_cache(maxsize=32)

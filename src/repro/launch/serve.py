@@ -69,6 +69,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="vary request prompt/gen lengths across the trace")
     ap.add_argument("--breakdown", action="store_true",
                     help="time forward vs sampling stages per tick (Fig. 1)")
+    ap.add_argument("--megatick", type=int, default=1, metavar="K",
+                    help="fuse up to K engine ticks into one on-device "
+                         "while_loop megastep (docs/megatick.md): one "
+                         "dispatch + one host sync per megastep instead "
+                         "of per tick; incompatible with --breakdown")
+    ap.add_argument("--compilation-cache-dir", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory "
+                         "(default $JAX_COMPILATION_CACHE_DIR or "
+                         "~/.cache/repro-xla)")
     # online streaming frontend (docs/streaming_serving.md)
     ap.add_argument("--http", type=int, default=None, metavar="PORT",
                     help="serve the streaming HTTP API on this port "
@@ -141,7 +150,8 @@ def run_legacy(args, cfg, model, params, dcfg, mesh=None) -> None:
         # — wall clocks can step under NTP and corrupt the measurement
         t0 = time.perf_counter()
         out = diffusion.generate(model, params, prompt, dcfg, rng=r_gen,
-                                 mesh=mesh, **fwd_kw)
+                                 mesh=mesh, megatick_k=args.megatick,
+                                 **fwd_kw)
         out.block_until_ready()
         dt = time.perf_counter() - t0
         tag = "warmup+compile" if req == 0 else "steady"
@@ -180,16 +190,22 @@ def make_requests(args, cfg, seed: int) -> list:
 
 def make_obs(args, cfg, dcfg, num_slots: int, max_seq: int):
     """Root ServingObs for the offline engine path: tracing on iff
-    --trace-out, drift armed when the analytical model covers the arch."""
+    --trace-out, drift armed when the analytical model covers the arch.
+    The drift baseline includes the host dispatch/device_sync stages at
+    their K-amortized cost so DriftMonitor models the megatick shape."""
     from repro.obs import ServingObs, TraceCollector
 
     obs = ServingObs(trace=TraceCollector(enabled=bool(args.trace_out)))
     if args.drift:
         try:
             from repro.obs.drift import modeled_tick_stages
-            obs.set_drift_model(modeled_tick_stages(
-                cfg, dcfg, batch=num_slots,
-                prompt_len=max(1, max_seq - dcfg.gen_length)))
+            from repro.sim.analytical import HostConfig
+            obs.set_drift_model(
+                modeled_tick_stages(
+                    cfg, dcfg, batch=num_slots,
+                    prompt_len=max(1, max_seq - dcfg.gen_length),
+                    megatick_k=args.megatick, host=HostConfig()),
+                host_stages=("dispatch", "device_sync"))
         except Exception as e:
             print(f"drift monitor disabled (no analytical model): {e}")
     return obs
@@ -221,7 +237,7 @@ def run_engine(args, cfg, model, params, dcfg, mesh=None) -> None:
                         max_seq_len=max_seq, mode=args.mode, policy=policy,
                         rng=jax.random.PRNGKey(args.seed),
                         breakdown=args.breakdown, fwd_kw=fwd_kw, mesh=mesh,
-                        obs=obs)
+                        obs=obs, megatick_k=args.megatick)
     eng.warmup()    # compile off-clock: the timed ticks charge no jit time
     completed = eng.run(reqs)
     for c in completed[: min(8, len(completed))]:
@@ -258,7 +274,7 @@ def run_http(args, cfg, model, params, dcfg, mesh=None) -> None:
         policy=policy, mesh=mesh, host=args.host, port=args.http,
         seed=args.seed, obs=obs, breakdown=args.breakdown,
         drift=args.drift, profile_ticks=args.profile_ticks,
-        profile_dir=args.profile_dir)
+        profile_dir=args.profile_dir, megatick_k=args.megatick)
     try:
         asyncio.run(serve_forever(frontend))
     except KeyboardInterrupt:
@@ -296,6 +312,12 @@ def make_mesh_arg(spec: str):
 
 def main(argv=None):
     args = build_parser().parse_args(argv)
+    # deployment hygiene before the first computation: tuned XLA flags
+    # only apply pre-backend-init, and arming the persistent compilation
+    # cache early lets warmup hit it (docs/megatick.md)
+    from repro import deploy
+    deploy.setup_xla_flags()
+    deploy.ensure_compilation_cache(args.compilation_cache_dir)
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))

@@ -26,7 +26,7 @@ split differs from the modeled NPU split, so ``HOST_DRIFT_BAND`` is the
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional
+from typing import Dict, Iterable, Mapping, Optional
 
 # Acceptable calibrated-drift band on a host CPU (no NPU): the measured
 # forward:sampling split of a smoke-scale CPU tick vs the analytical NPU
@@ -39,7 +39,8 @@ HOST_DRIFT_BAND = (0.05, 20.0)
 
 def modeled_tick_stages(model_cfg, dcfg, *, batch: int, prompt_len: int,
                         hw=None, model_shards: int = 1,
-                        data_shards: int = 1) -> Dict[str, float]:
+                        data_shards: int = 1, megatick_k: int = 1,
+                        host=None) -> Dict[str, float]:
     """Per-*tick* modeled stage seconds for a serving engine config.
 
     Uses ``sim.analytical.end_to_end`` on the fused (or sharded) head path
@@ -48,6 +49,14 @@ def modeled_tick_stages(model_cfg, dcfg, *, batch: int, prompt_len: int,
     denoising step for every active slot.  Returns
     ``{"forward": s, "sampling": s, "tick": s}`` where ``tick`` is the
     roofline total (what a non-breakdown engine can compare against).
+
+    When ``host`` (a ``sim.analytical.HostConfig``) is given, the dict also
+    carries the host-domain stages ``dispatch`` and ``device_sync`` at
+    their K-amortized per-tick cost (``host_overhead_per_tick``): one
+    dispatch + one sync per megastep, divided over ``megatick_k`` ticks.
+    Host stages live on host wall-clock, not the modeled NPU clock — hand
+    them to ``DriftMonitor(..., host_stages=...)`` so they are excluded
+    from the hardware-scale calibration and tracked as raw ratios.
     """
     from repro.sim import analytical
 
@@ -60,9 +69,12 @@ def modeled_tick_stages(model_cfg, dcfg, *, batch: int, prompt_len: int,
         sampling_engine=engine, model_shards=model_shards,
         data_shards=data_shards)
     n_ticks = (dcfg.gen_length // dcfg.block_length) * dcfg.steps_per_block
-    return {"forward": res.model_s / n_ticks,
-            "sampling": res.sampling_s / n_ticks,
-            "tick": res.total_s / n_ticks}
+    out = {"forward": res.model_s / n_ticks,
+           "sampling": res.sampling_s / n_ticks,
+           "tick": res.total_s / n_ticks}
+    if host is not None:
+        out.update(analytical.host_overhead_per_tick(host, megatick_k))
+    return out
 
 
 @dataclasses.dataclass
@@ -84,12 +96,18 @@ class DriftMonitor:
     """
 
     def __init__(self, modeled: Mapping[str, float],
-                 calibrate: bool = True):
+                 calibrate: bool = True,
+                 host_stages: Iterable[str] = ()):
         bad = {k: v for k, v in modeled.items() if v <= 0}
         if bad:
             raise ValueError(f"modeled stage seconds must be > 0: {bad}")
         self.modeled = dict(modeled)
         self.calibrate = calibrate
+        # Host-domain stages (dispatch, device_sync under megatick): their
+        # modeled seconds are host wall-clock already, so they must not
+        # participate in the measured/modeled hardware-scale fit — they
+        # report *raw* measured/modeled ratios instead of calibrated ones.
+        self.host_stages = frozenset(host_stages)
         self._stages: Dict[str, _StageState] = {}
 
     def observe(self, stage: str, seconds: float) -> None:
@@ -112,26 +130,32 @@ class DriftMonitor:
         meas = mod = 0.0
         for stage, st in self._stages.items():
             m = self.modeled.get(stage)
-            if m is not None and st.count:
+            if m is not None and st.count and stage not in self.host_stages:
                 meas += st.mean
                 mod += m
         return meas / mod if mod > 0 and meas > 0 else 1.0
 
     def ratios(self) -> Dict[str, Optional[float]]:
         """Calibrated per-stage drift ``(measured/modeled)/scale``; ``None``
-        for stages with no model or no measurements."""
+        for stages with no model or no measurements.  Host stages skip the
+        hardware-scale division (both sides are host wall-clock)."""
         s = self.scale
         out: Dict[str, Optional[float]] = {}
         for stage, st in self._stages.items():
             m = self.modeled.get(stage)
-            out[stage] = (st.mean / m / s
-                          if m is not None and st.count and s > 0 else None)
+            if m is None or not st.count or s <= 0:
+                out[stage] = None
+            elif stage in self.host_stages:
+                out[stage] = st.mean / m
+            else:
+                out[stage] = st.mean / m / s
         return out
 
     def report(self) -> dict:
         """Snapshot for /v1/stats, benchmarks and the drift gauge."""
         return {
             "scale": self.scale,
+            "host_stages": sorted(self.host_stages),
             "ticks": max((st.count for st in self._stages.values()),
                          default=0),
             "modeled_s": dict(self.modeled),

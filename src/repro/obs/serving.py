@@ -14,6 +14,9 @@ Metric catalog (names/labels/units in docs/observability.md):
   dllm_ticks_total{replica}                 engine ticks
   dllm_kv_valid_uploads_total{replica}      host->device mask refreshes
   dllm_policy_early_exits_total{replica}    SlowFast whole-block commits
+  dllm_host_syncs_elided_total{replica}     skipped per-tick host syncs
+  dllm_megasteps_total{replica}             fused megatick dispatches
+  dllm_megastep_ticks{replica}              histogram, ticks per megastep
   dllm_tick_seconds{replica}                histogram, full tick wall time
   dllm_tick_stage_seconds{replica,stage}    histogram, per-stage seconds
   dllm_queue_wait_seconds{replica}          histogram, arrival -> admit
@@ -37,7 +40,7 @@ from __future__ import annotations
 from typing import Dict, Mapping, Optional
 
 from repro.obs.drift import DriftMonitor
-from repro.obs.registry import LATENCY_BUCKETS, Registry
+from repro.obs.registry import LATENCY_BUCKETS, Registry, exp_buckets
 from repro.obs.tracing import TraceCollector
 
 
@@ -74,6 +77,17 @@ class ServingObs:
             self._early_exits = r.counter(
                 "dllm_policy_early_exits_total",
                 "SlowFast whole-block early-exit commits", ("replica",))
+            self._host_elided = r.counter(
+                "dllm_host_syncs_elided_total",
+                "Per-tick host syncs skipped (no streaming sink needed "
+                "them, or folded into one megastep drain)", ("replica",))
+            self._megasteps = r.counter(
+                "dllm_megasteps_total",
+                "Fused megatick while_loop dispatches", ("replica",))
+            self._megastep_ticks = r.histogram(
+                "dllm_megastep_ticks",
+                "Denoising ticks fused per megastep", ("replica",),
+                exp_buckets(1.0, 2.0, 8))
             self._tick_s = r.histogram(
                 "dllm_tick_seconds", "Engine tick wall seconds",
                 ("replica",), LATENCY_BUCKETS)
@@ -106,7 +120,8 @@ class ServingObs:
                 ("replica",))
         else:
             for attr in ("_requests", "_tokens", "_blocks", "_ticks",
-                         "_kv_uploads", "_early_exits", "_tick_s",
+                         "_kv_uploads", "_early_exits", "_host_elided",
+                         "_megasteps", "_megastep_ticks", "_tick_s",
                          "_stage_s", "_queue_wait", "_ttft", "_latency",
                          "_active", "_queue_depth", "_drift",
                          "_drift_scale"):
@@ -119,6 +134,9 @@ class ServingObs:
         self._b_tokens = self._tokens.labels(replica=rep)
         self._b_blocks = self._blocks.labels(replica=rep)
         self._b_kv = self._kv_uploads.labels(replica=rep)
+        self._b_elided = self._host_elided.labels(replica=rep)
+        self._b_megasteps = self._megasteps.labels(replica=rep)
+        self._b_megastep_ticks = self._megastep_ticks.labels(replica=rep)
         self._b_tick_s = self._tick_s.labels(replica=rep)
         self._b_active = self._active.labels(replica=rep)
         self._b_queue = self._queue_depth.labels(replica=rep)
@@ -136,10 +154,14 @@ class ServingObs:
                           _root=self)
 
     def set_drift_model(self, modeled: Mapping[str, float],
-                        calibrate: bool = True) -> "ServingObs":
+                        calibrate: bool = True,
+                        host_stages: tuple = ()) -> "ServingObs":
         """Arm the drift monitor with modeled per-tick stage seconds
-        (see obs.drift.modeled_tick_stages)."""
-        self.drift = DriftMonitor(modeled, calibrate=calibrate)
+        (see obs.drift.modeled_tick_stages).  ``host_stages`` names the
+        host-wall-clock stages (dispatch/device_sync under megatick) kept
+        out of the hardware-scale calibration."""
+        self.drift = DriftMonitor(modeled, calibrate=calibrate,
+                                  host_stages=host_stages)
         return self
 
     # -- request lifecycle (engine hooks) -----------------------------------
@@ -257,6 +279,26 @@ class ServingObs:
 
     def kv_valid_upload(self) -> None:
         self._b_kv.inc()
+
+    def host_syncs_elided(self, n: int = 1) -> None:
+        if n > 0:
+            self._b_elided.inc(n)
+
+    def megastep(self, n_ticks: int, k_req: int, dt: float,
+                 t_start_us: Optional[float] = None) -> None:
+        """One fused megatick dispatch of ``n_ticks`` (<= requested
+        ``k_req``) denoising ticks taking ``dt`` seconds end to end.  The
+        per-tick attribution already flowed through :meth:`tick`; this
+        records the dispatch-level shape (and, when tracing, a megastep
+        span the back-dated tick spans nest under)."""
+        self._b_megasteps.inc()
+        self._b_megastep_ticks.observe(n_ticks)
+        if self.trace.enabled and t_start_us is not None:
+            tr = self.trace
+            tr.emit_many([{"ph": "X", "name": "megastep", "cat": "engine",
+                           "ts": t_start_us, "dur": dt * 1e6, "pid": tr.pid,
+                           "tid": tr._tid(),
+                           "args": {"n_ticks": n_ticks, "k_req": k_req}}])
 
     def policy_early_exit(self, n: int = 1) -> None:
         if n > 0:

@@ -50,16 +50,20 @@ class TraceCollector:
         self.dropped = 0
         self._events: List[dict] = []
         self._lock = threading.Lock()
-        self._tids: Dict[int, int] = {}      # thread ident -> stable tid
+        # per-thread stable tid: thread-local, NOT keyed by get_ident() —
+        # the OS recycles idents of dead threads, which would silently
+        # alias two workers onto one lane (and drop one name meta)
+        self._tid_local = threading.local()
+        self._n_tids = 0
 
     # -- plumbing -----------------------------------------------------------
 
     def _tid(self) -> int:
-        ident = threading.get_ident()
-        tid = self._tids.get(ident)
+        tid = getattr(self._tid_local, "tid", None)
         if tid is None:
             with self._lock:
-                tid = self._tids.setdefault(ident, len(self._tids) + 1)
+                self._n_tids += 1
+                tid = self._tid_local.tid = self._n_tids
             # name the lane once so Perfetto shows the thread's role
             self._emit({"ph": "M", "name": "thread_name", "pid": self.pid,
                         "tid": tid, "args":

@@ -53,7 +53,7 @@ import numpy as np
 from repro.core import diffusion, schedule as schedule_lib
 from repro.serving.cache_pool import CachePool
 from repro.serving.metrics import MetricsTracker
-from repro.serving.scheduler import FIFOPolicy, Policy
+from repro.serving.scheduler import FIFOPolicy, Policy, SlowFastPolicy
 
 
 @dataclasses.dataclass
@@ -135,7 +135,7 @@ class ServingEngine:
                  mode: str = "warm", policy: Optional[Policy] = None,
                  rng: Optional[jax.Array] = None, jit_steps: bool = True,
                  breakdown: bool = False, fwd_kw: Optional[dict] = None,
-                 mesh=None, obs=None):
+                 mesh=None, obs=None, megatick_k: int = 1):
         if mode not in ("warm", "none"):
             raise ValueError(f"unknown engine mode {mode!r}")
         self.model = model
@@ -213,6 +213,41 @@ class ServingEngine:
         self.kv_valid = self._put_rows(jnp.asarray(self._valid_np))
         self._kv_dirty = False
         self.kv_valid_uploads = 0           # host->device refreshes (1/tick)
+        # mask-mirror-diff fetches (and, with megatick, per-tick device
+        # syncs) skipped because no streaming sink needed them — exported
+        # as dllm_host_syncs_elided_total (docs/megatick.md)
+        self.host_syncs_elided = 0
+
+        # --- device-resident megatick (docs/megatick.md): fuse K ticks
+        # into one jitted while_loop dispatch; host state replays from the
+        # drained on-device commit buffers at megastep boundaries
+        self.megatick_k = int(megatick_k)
+        if self.megatick_k < 1:
+            raise ValueError(f"megatick_k must be >= 1, got {megatick_k}")
+        self._megatick_fn = None
+        self._sf_threshold: Optional[float] = None
+        if self.megatick_k > 1:
+            if breakdown:
+                raise ValueError(
+                    "megatick_k > 1 is incompatible with breakdown timing "
+                    "(the megastep is one fused while_loop executable)")
+            if self.fwd_kw:
+                raise ValueError(
+                    "megatick serving does not support extra forward "
+                    "kwargs")
+            if isinstance(self.policy, SlowFastPolicy):
+                # step_k moves on device: the loop applies the confidence
+                # early-exit per tick without a host round-trip
+                self._sf_threshold = float(self.policy.threshold)
+            elif type(self.policy).step_k is not Policy.step_k:
+                raise ValueError(
+                    f"policy {self.policy.name!r} overrides step_k; only "
+                    "the default schedule and SlowFastPolicy run on "
+                    "device inside a megatick")
+            self._megatick_fn = diffusion.get_megatick_fn(
+                model, dcfg, self.mask_id, self.megatick_k, mesh=mesh,
+                jit_steps=jit_steps, quant=self._quant,
+                slowfast_threshold=self._sf_threshold)
 
         if mesh is not None:
             self._tick_fn = diffusion.get_spmd_tick_fn(
@@ -354,12 +389,24 @@ class ServingEngine:
         """Compile the tick executable(s) with a dummy zero-commit tick,
         leaving the virtual clock, rng chain, metrics, canvas, and KV pool
         untouched — so the first *timed* tick charges no jit compile time
-        to ``now`` (latency percentiles / tokens_per_s stay clean)."""
+        to ``now`` (latency percentiles / tokens_per_s stay clean).
+
+        Compiles land in the persistent compilation cache
+        (repro.deploy, docs/megatick.md), so later processes warm up from
+        disk.  With ``megatick_k > 1`` both the K=1 tick *and* the
+        configured megatick shape pre-compile, and the megatick warmup
+        runs on throwaway *copies* of the canvas/cache — its jitted
+        executable donates those buffers, and warmup must leave engine
+        state untouched."""
+        from repro import deploy
+        deploy.ensure_compilation_cache()
         self._flush_kv_valid()
         B = self.num_slots
         bs = jnp.zeros((B,), jnp.int32)
         k = jnp.zeros((B,), jnp.int32)           # commits nothing
-        srng = jax.random.PRNGKey(0)             # self.rng not advanced
+        # the K=1 tick path splits the rng chain eagerly every tick: warm
+        # that executable too, or the first timed tick pays its compile
+        srng = jax.random.split(jax.random.PRNGKey(0))[1]
         cache = self.pool.cache if self.mode == "warm" else None
         if self.breakdown:
             feats, _ = self._fwd_fn(self.params, self.x, self.kv_valid, bs,
@@ -369,12 +416,32 @@ class ServingEngine:
             out = self._tick_fn(self.params, self.x, self.kv_valid, bs, k,
                                 srng, cache, **self.fwd_kw)
         jax.block_until_ready(out)               # outputs discarded
+        if self._megatick_fn is not None:
+            zeros = np.zeros((B,), np.int32)
+            state = diffusion.megatick_state(
+                zeros, zeros, self.dcfg, active=np.zeros((B,), bool))
+            x_copy = jnp.copy(self.x)            # donated + discarded
+            cache_copy = (None if cache is None
+                          else jax.tree.map(jnp.copy, cache))
+            out = self._megatick_fn(self.params, x_copy, self.kv_valid,
+                                    state, jax.random.PRNGKey(0),
+                                    jnp.int32(1), jnp.asarray(False),
+                                    cache_copy)
+            jax.block_until_ready(out)
         return self
 
-    def tick(self) -> bool:
+    def tick(self, max_ticks: Optional[int] = None) -> bool:
         """Admit, run one fused batched step, advance slot states.
 
-        Returns False when there is nothing to do (drained)."""
+        Returns False when there is nothing to do (drained).  With
+        ``megatick_k > 1`` a tick() call runs one *megastep* of up to
+        megatick_k fused denoising ticks (fewer under queue pressure or
+        early release); ``max_ticks`` caps the productive ticks this call
+        may run — the ``--profile-ticks`` contract (profile exactly N
+        ticks regardless of K).  Callers observing progress should diff
+        ``ticks_total``, which counts denoising ticks in both modes."""
+        if self.megatick_k > 1:
+            return self._megastep(max_ticks)
         obs = self.obs
         t_enter = time.perf_counter()
         self._admit()
@@ -397,22 +464,25 @@ class ServingEngine:
             t = s.step_in_block
             default_k = int(self._ksched[t]) if t < T else s.block_masks_left
             k_np[i] = min(self.policy.step_k(s, default_k), L)
+
+        # per-stage tick timing (docs/observability.md): host_prep is the
+        # pure-python admission + k-schedule bookkeeping; everything that
+        # talks to the runtime — the eager rng split (an XLA computation
+        # of its own), the bs/k host->device puts, and the tick call —
+        # is *dispatch*, and device_sync is the wait on results.  That
+        # dispatch/device_sync pair is exactly the per-tick host tax the
+        # megatick path amortizes over K ticks (docs/megatick.md); with
+        # ``breakdown`` the dispatch window instead splits into blocking
+        # forward / sampling stages.  Costs a handful of perf_counter
+        # reads; stage values only leave the tick via ``obs``/breakdown
+        # metrics.
+        stages: Dict[str, float] = {}
+        t0 = time.perf_counter()
+        stages["host_prep"] = t0 - t_enter
         bs_vec = jnp.asarray(bs_np)
         k_vec = jnp.asarray(k_np)
         self.rng, srng = jax.random.split(self.rng)
         cache = self.pool.cache if self.mode == "warm" else None
-
-        # per-stage tick timing (docs/observability.md): admission + k-
-        # schedule prep, then either the breakdown stages (forward /
-        # sampling / host_sync) or the fused-tick split (dispatch = host
-        # time building + enqueueing the XLA call, device_sync = wait on
-        # results — the pair that attributes the megatick host-overhead
-        # gap), and finally the commit loop.  Costs a handful of
-        # perf_counter reads; stage values only leave the tick via
-        # ``obs``/breakdown metrics.
-        stages: Dict[str, float] = {}
-        t0 = time.perf_counter()
-        stages["host_prep"] = t0 - t_enter
         if self.breakdown:
             feats, new_cache = self._fwd_fn(
                 self.params, self.x, self.kv_valid, bs_vec, cache,
@@ -515,6 +585,12 @@ class ServingEngine:
                     masks_left=masks_left, done=done, final_tokens=final))
                 if done:
                     del self._commit_cbs[uid]
+        if x_host is None and n_active:
+            # no streaming sink and no release needed the canvas this
+            # tick: the mask-mirror-diff host fetch was skipped entirely
+            self.host_syncs_elided += 1
+            if obs is not None:
+                obs.host_syncs_elided(1)
         stages["commit"] = time.perf_counter() - t4
         for name, s_sec in stages.items():
             if name not in ("forward", "sampling"):   # recorded in-branch
@@ -527,6 +603,195 @@ class ServingEngine:
                 self._early_exits_seen = ee
             obs.tick(stages, dt, self.active_slots, len(self.queue),
                      t_start_us=t_enter * 1e6)
+        return True
+
+    # -- device-resident megatick (docs/megatick.md) ------------------------
+
+    def _choose_megatick_k(self, max_ticks: Optional[int]) -> tuple:
+        """Adaptive megastep depth from queue pressure: admission happens
+        only at megastep boundaries, so a deep megastep must not starve
+        queued work.  With requests queued, the loop stops at the first
+        release (``stop_on_release``) so freed slots refill immediately;
+        if slots are *already* free (the queued work just hasn't arrived
+        on the virtual clock yet), depth drops to 1 so the next arrival
+        admits at most one tick late — exactly the K=1 admission cadence.
+        """
+        k = self.megatick_k
+        if max_ticks is not None:
+            k = max(1, min(k, int(max_ticks)))
+        if self.queue:
+            if self.pool.free_slots:
+                k = 1
+            return k, True
+        return k, False
+
+    def _megastep(self, max_ticks: Optional[int] = None) -> bool:
+        """One megastep: admit at the boundary, run up to K fused ticks in
+        a single on-device while_loop dispatch, then drain the commit
+        buffers and replay them tick-by-tick through the host state
+        machine — metrics, streaming callbacks, and obs hooks see the
+        identical per-tick event sequence the K=1 path produces, with
+        contiguous tick numbering and one device sync per megastep
+        instead of per tick."""
+        obs = self.obs
+        t_enter = time.perf_counter()
+        self._admit()
+        if self.active_slots == 0:
+            nxt = self._next_arrival()
+            if nxt is None:
+                return False
+            self.now = max(self.now, nxt)     # fast-forward through idle gap
+            self._admit()
+        self._flush_kv_valid()
+        k_req, stop_on_release = self._choose_megatick_k(max_ticks)
+
+        L = self.dcfg.block_length
+        B = self.num_slots
+        pl = np.zeros((B,), np.int32)
+        gb = np.zeros((B,), np.int32)
+        bi = np.zeros((B,), np.int32)
+        ti = np.zeros((B,), np.int32)
+        bml = np.zeros((B,), np.int32)
+        lc = np.full((B,), -np.inf, np.float32)
+        act = np.zeros((B,), bool)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            pl[i] = s.request.prompt_len
+            gb[i] = s.request.gen_length // L
+            bi[i] = s.block_idx
+            ti[i] = s.step_in_block
+            bml[i] = s.block_masks_left
+            lc[i] = s.last_conf
+            act[i] = True
+        cache = self.pool.cache if self.mode == "warm" else None
+
+        stages: Dict[str, float] = {}
+        t0 = time.perf_counter()
+        stages["host_prep"] = t0 - t_enter
+        # dispatch window mirrors the K=1 path: the state host->device
+        # puts plus the single fused call.  x and cache are *donated*
+        # into the loop (the engine rebinds both from the outputs below)
+        state = diffusion.megatick_state(
+            pl, gb, self.dcfg, block_idx=bi, step_in_block=ti,
+            block_masks_left=bml, last_conf=lc, active=act)
+        x_new, new_cache, rng_new, _, bufs, n_dev = self._megatick_fn(
+            self.params, self.x, self.kv_valid, state, self.rng,
+            jnp.int32(k_req), jnp.asarray(bool(stop_on_release)), cache)
+        t2 = time.perf_counter()
+        stages["dispatch"] = t2 - t0
+        n = int(n_dev)                        # THE device sync point
+        masks_b = np.asarray(bufs["masks_left"])
+        conf_b = np.asarray(bufs["conf"])
+        early_b = (np.asarray(bufs["early"])
+                   if self._sf_threshold is not None else None)
+        sinks = any(s is not None and s.request.uid in self._commit_cbs
+                    for s in self.slots)
+        xa_b = np.asarray(bufs["xa"]) if sinks else None
+        t3 = time.perf_counter()
+        stages["device_sync"] = t3 - t2
+        dt = t3 - t0
+        self.x = x_new
+        self.rng = rng_new
+        if self.mode == "warm":
+            self.pool.update(new_cache)
+        elided = (n - 1) + (0 if sinks else 1)
+        if elided > 0:
+            self.host_syncs_elided += elided
+            if obs is not None:
+                obs.host_syncs_elided(elided)
+
+        t4 = time.perf_counter()
+        now0 = self.now
+        committed_total = 0
+        x_final: Optional[np.ndarray] = None
+        active_counts: List[int] = []
+        for j in range(n):
+            self.now = now0 + dt * (j + 1) / n
+            self.ticks_total += 1
+            active_counts.append(self.active_slots)
+            self.metrics.record_tick(dt / n, self.active_slots)
+            for i, s in enumerate(self.slots):
+                if s is None:
+                    continue
+                s.ticks += 1
+                uid = s.request.uid
+                cb = self._commit_cbs.get(uid)
+                masks_left = int(masks_b[j, i])
+                committed_total += max(0, s.block_masks_left - masks_left)
+                positions = tokens = None
+                if cb is not None:
+                    bs = s.request.prompt_len + s.block_idx * L
+                    xa = xa_b[j, i]
+                    newly = s.masked[bs:bs + L] & (xa != self.mask_id)
+                    local = np.nonzero(newly)[0]
+                    positions = bs + local
+                    tokens = xa[local].copy()
+                    s.masked[bs:bs + L] &= ~newly
+                if not s.first_commit and masks_left < L:
+                    s.first_commit = True
+                    self.metrics.request_first_commit(uid, self.now)
+                    if obs is not None:
+                        obs.request_first_commit(
+                            uid, max(0.0, self.now - s.request.arrival_time))
+                block_idx, step_in_block = s.block_idx, s.step_in_block
+                done = False
+                final: Optional[np.ndarray] = None
+                if masks_left == 0:           # block fully committed
+                    if obs is not None:
+                        obs.block_committed(
+                            uid, block_idx, self.ticks_total,
+                            len(positions) if positions is not None
+                            else s.block_masks_left,
+                            positions, tokens)
+                    s.block_idx += 1
+                    s.step_in_block = 0
+                    s.last_conf = float("-inf")
+                    s.block_masks_left = L
+                    if s.block_idx * L >= s.request.gen_length:
+                        done = True
+                        if x_final is None:
+                            # released rows tick with k=0 afterwards, so
+                            # the final canvas still holds their rows
+                            x_final = np.asarray(self.x)
+                        if cb is not None:
+                            final = x_final[i, :s.request.total_len].copy()
+                        self._release(i, x_final[i])
+                else:
+                    s.step_in_block += 1
+                    s.last_conf = float(conf_b[j, i])
+                    s.block_masks_left = masks_left
+                if cb is not None:
+                    cb(CommitEvent(
+                        uid=uid, tick=self.ticks_total, now=self.now,
+                        block_idx=block_idx, step_in_block=step_in_block,
+                        positions=positions, tokens=tokens,
+                        masks_left=masks_left, done=done,
+                        final_tokens=final))
+                    if done:
+                        del self._commit_cbs[uid]
+        if early_b is not None:
+            self.policy.early_exits += int(early_b[:n].sum())
+        stages["commit"] = time.perf_counter() - t4
+        for name, s_sec in stages.items():
+            self.metrics.record_stage(name, s_sec)
+        if obs is not None:
+            obs.tokens_committed(committed_total)
+            ee = getattr(self.policy, "early_exits", 0)
+            if ee > self._early_exits_seen:
+                obs.policy_early_exit(ee - self._early_exits_seen)
+                self._early_exits_seen = ee
+            # per-megastep stages with per-tick attribution: every
+            # replayed tick carries 1/n of the megastep's stage seconds,
+            # so the dispatch/device_sync histograms directly show the
+            # amortization (and the drift monitor compares against
+            # host_overhead_per_tick(host, K))
+            per_tick = {name: s_sec / n for name, s_sec in stages.items()}
+            queued = len(self.queue)
+            for j in range(n):
+                obs.tick(per_tick, dt / n, active_counts[j], queued,
+                         t_start_us=(t_enter + j * (dt / n)) * 1e6)
+            obs.megastep(n, k_req, dt, t_start_us=t_enter * 1e6)
         return True
 
     def run(self, requests: Optional[Sequence[Request]] = None

@@ -268,13 +268,25 @@ class EngineWorker:
                 if self.profile_ticks:
                     self._profile_start()
                 t_tick = time.perf_counter()
-                progressed = eng.tick()
+                # one tick() call may be a K-tick megastep: count *productive
+                # ticks* (engine tick counter delta), not calls, so
+                # --profile-ticks N captures exactly N ticks at any K —
+                # while profiling, cap the megastep at the remaining budget
+                prev_ticks = eng.ticks_total
                 if self._profiling:
-                    if progressed:
-                        self._profiled += 1
+                    progressed = eng.tick(
+                        max_ticks=max(1, self.profile_ticks - self._profiled))
+                else:
+                    progressed = eng.tick()
+                n_ticks = eng.ticks_total - prev_ticks
+                if self._profiling:
+                    self._profiled += n_ticks
                     self._profile_stop_if_done()
                 if progressed and self.tick_floor_s:
-                    rem = self.tick_floor_s - (time.perf_counter() - t_tick)
+                    # pace by ticks advanced: a K-tick megastep owes K
+                    # emulated device waits, not one
+                    rem = (self.tick_floor_s * max(1, n_ticks)
+                           - (time.perf_counter() - t_tick))
                     if rem > 0:
                         time.sleep(rem)       # emulated device wait
             else:

@@ -335,7 +335,8 @@ def build_frontend(model, params, dcfg, *, model_name: str,
                    breakdown: bool = False,
                    drift: bool = True,
                    profile_ticks: int = 0,
-                   profile_dir: Optional[str] = None) -> ServeFrontend:
+                   profile_dir: Optional[str] = None,
+                   megatick_k: int = 1) -> ServeFrontend:
     """Wire engines -> workers -> router -> frontend.  One independent
     engine per replica (each with its own slot pool, rng chain, and tick
     thread; params are shared read-only, and the jitted tick executable is
@@ -349,6 +350,8 @@ def build_frontend(model, params, dcfg, *, model_name: str,
     with the sim/analytical per-tick stage prediction for this exact
     model/serving config.  ``profile_ticks=N`` wraps the first N ticks of
     each replica in a jax.profiler device trace under ``profile_dir``.
+    ``megatick_k=K`` fuses up to K ticks per engine dispatch
+    (docs/megatick.md) — commit callbacks still see every per-tick event.
     """
     import jax
 
@@ -361,21 +364,25 @@ def build_frontend(model, params, dcfg, *, model_name: str,
     if drift:
         try:
             from repro.obs.drift import modeled_tick_stages
+            from repro.sim.analytical import HostConfig
             modeled = modeled_tick_stages(
                 model.cfg, dcfg, batch=num_slots,
-                prompt_len=max(1, max_seq_len - dcfg.gen_length))
+                prompt_len=max(1, max_seq_len - dcfg.gen_length),
+                megatick_k=megatick_k, host=HostConfig())
         except Exception as e:          # model outside analytical coverage
             print(f"drift monitor disabled (no analytical model): {e}")
     workers = []
     for i in range(replicas):
         rep_obs = obs.for_replica(f"replica-{i}")
         if modeled is not None:
-            rep_obs.set_drift_model(modeled)
+            rep_obs.set_drift_model(modeled,
+                                    host_stages=("dispatch", "device_sync"))
         eng = ServingEngine(model, params, dcfg, num_slots=num_slots,
                             max_seq_len=max_seq_len, mode=mode,
                             policy=policy, mesh=mesh,
                             rng=jax.random.PRNGKey(seed + i),
-                            breakdown=breakdown, obs=rep_obs)
+                            breakdown=breakdown, obs=rep_obs,
+                            megatick_k=megatick_k)
         if warmup:
             eng.warmup()              # compile off-clock, before accepting
         workers.append(EngineWorker(eng, name=f"replica-{i}",

@@ -437,3 +437,42 @@ def end_to_end(cfg: ModelConfig, hw: HWConfig, *, B: int, prompt: int,
     total = model.t + samp.t
     energy = (model + samp).energy(hw)
     return E2EResult(total, model.t, samp.t, energy, B * gen_len)
+
+
+# ---------------------------------------------------------------------------
+# Host overhead model (megatick amortization, docs/megatick.md)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HostConfig:
+    """Per-*dispatch* host-side overhead, outside the NPU roofline.
+
+    The device-side stage models above charge zero host time — correct for
+    the paper's NPU operating point but not for a Python serving loop,
+    where every executable launch pays a fixed tax: argument flattening +
+    dispatch (``dispatch_s``) and the result fetch / ``block_until_ready``
+    sync (``sync_s``).  A K-tick megastep pays each **once per megastep**,
+    so the per-tick charge is the per-dispatch cost divided by K — the
+    amortization BENCH_megatick measures and DriftMonitor models.
+
+    Defaults are the order of magnitude a smoke-scale CPU engine measures
+    for a jitted tick dispatch; pass measured values for tighter bands.
+    """
+
+    dispatch_s: float = 2e-4
+    sync_s: float = 1e-4
+
+
+def host_overhead_per_tick(host: HostConfig,
+                           megatick_k: int = 1) -> Dict[str, float]:
+    """Modeled per-tick host stage seconds under K-tick megastepping.
+
+    Returns ``{"dispatch": s, "device_sync": s}`` — the same stage names
+    the engine's tick-path timers record, so the dict can be merged
+    directly into a :func:`repro.obs.drift.modeled_tick_stages` baseline.
+    """
+    if megatick_k < 1:
+        raise ValueError(f"megatick_k must be >= 1, got {megatick_k}")
+    return {"dispatch": host.dispatch_s / megatick_k,
+            "device_sync": host.sync_s / megatick_k}

@@ -160,8 +160,10 @@ def test_max_queue_wait_sheds_queued_requests(setup):
     p = _prompt(cfg, 8, 8)
 
     async def go():
+        # pace ticks so the head request provably outlives the 0.05s sleep
+        # (warm jit caches finish 32 unpaced ticks in well under 50ms)
         fe = _frontend(model, params, dcfg, replicas=1, num_slots=1,
-                       max_queue=8, max_queue_wait=0.0)
+                       max_queue=8, max_queue_wait=0.0, tick_floor_s=0.01)
         await fe.start()
         try:
             first = asyncio.ensure_future(

@@ -1,0 +1,242 @@
+"""Device-resident megatick (docs/megatick.md): K engine ticks fused into
+one jitted ``lax.while_loop`` dispatch must be *observationally identical*
+to K single ticks — bit-identical tokens, identical ``CommitEvent`` and
+``block_committed`` trace sequences, contiguous tick numbering — while
+paying one host sync per megastep instead of per tick.
+
+Multi-device mesh shapes need forced host devices before jax initializes:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest -q tests/test_megatick.py
+
+Under the plain tier-1 run (1 CPU device) the (2, 2) shape skips; the
+(1, 1) mesh still exercises the full shard_map megatick plumbing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.core import diffusion
+from repro.launch.mesh import make_debug_mesh
+from repro.models.registry import build_model
+from repro.obs import ServingObs, TraceCollector
+from repro.serving import Request, ServingEngine
+from repro.serving.scheduler import Policy, SlowFastPolicy
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = base.get_config("llada-8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _skip_unless(n_devices: int):
+    if jax.device_count() < n_devices:
+        pytest.skip(f"needs {n_devices} devices (XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=8)")
+
+
+def _dcfg(gen=16, block=8, steps=4, cache="none", **kw):
+    return diffusion.DiffusionConfig(gen_length=gen, block_length=block,
+                                     steps_per_block=steps, cache_mode=cache,
+                                     **kw)
+
+
+def _reqs(cfg, n=4, seed=0, prompt_len=8, gen=16):
+    rs = np.random.RandomState(seed)
+    return [Request(uid=1 + i,
+                    prompt=rs.randint(0, cfg.vocab - 2,
+                                      size=(prompt_len,)).astype(np.int32),
+                    gen_length=gen)
+            for i in range(n)]
+
+
+def _run(model, params, dcfg, reqs, *, megatick_k=1, mode="none",
+         mesh=None, policy=None, sinks=True, seed=7):
+    """Run an engine to completion; return (engine, completed-by-uid,
+    CommitEvent list, block_committed trace-event list)."""
+    obs = ServingObs(trace=TraceCollector(enabled=True))
+    eng = ServingEngine(model, params, dcfg, num_slots=2, max_seq_len=24,
+                        mode=mode, policy=policy, mesh=mesh,
+                        rng=jax.random.PRNGKey(seed), obs=obs,
+                        megatick_k=megatick_k)
+    events = []
+    for r in reqs:
+        eng.submit(r, on_commit=events.append if sinks else None)
+    eng.warmup()
+    completed = sorted(eng.run(), key=lambda c: c.uid)
+    blocks = [(e["id"], e["args"]) for e in obs.trace.events()
+              if e.get("name") == "block_committed"]
+    return eng, completed, events, blocks
+
+
+def _commit_key(e):
+    return (e.uid, e.tick, e.block_idx, e.step_in_block, e.masks_left,
+            e.done, tuple(e.positions), tuple(int(t) for t in e.tokens))
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: megatick(K) == K single ticks, observationally
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("megatick_k", [1, 2, 8])
+@pytest.mark.parametrize("cache", ["none", "warm"])
+def test_engine_megatick_parity(setup, cache, megatick_k):
+    """Tokens, CommitEvents, and block_committed trace events from a
+    megatick(K) engine are bit-identical to the K=1 engine, across both
+    engine tick modes (recompute / pooled warm step)."""
+    cfg, model, params = setup
+    dcfg = _dcfg()
+    ref_eng, ref, ref_ev, ref_blocks = _run(
+        model, params, dcfg, _reqs(cfg), mode=cache)
+    eng, out, ev, blocks = _run(
+        model, params, dcfg, _reqs(cfg), mode=cache, megatick_k=megatick_k)
+    assert [tuple(c.tokens) for c in out] == [tuple(c.tokens) for c in ref]
+    assert [c.ticks for c in out] == [c.ticks for c in ref]
+    assert [_commit_key(e) for e in ev] == [_commit_key(e) for e in ref_ev]
+    assert blocks == ref_blocks
+    assert eng.ticks_total == ref_eng.ticks_total
+    if megatick_k > 1:
+        # the whole point: strictly fewer host syncs than ticks
+        assert eng.host_syncs_elided > ref_eng.host_syncs_elided
+
+
+@pytest.mark.parametrize("data,model_ax", [(1, 1), (2, 2)])
+def test_engine_megatick_mesh_parity(setup, data, model_ax):
+    """Megatick under the SPMD (data, model) shard_map path matches the
+    K=1 engine on the same mesh bit-for-bit."""
+    _skip_unless(data * model_ax)
+    cfg, model, params = setup
+    dcfg = _dcfg(head_path="fused")
+    mesh = make_debug_mesh(data, model_ax)
+    _, ref, ref_ev, ref_blocks = _run(model, params, dcfg, _reqs(cfg),
+                                      mesh=mesh)
+    _, out, ev, blocks = _run(model, params, dcfg, _reqs(cfg), mesh=mesh,
+                              megatick_k=4)
+    assert [tuple(c.tokens) for c in out] == [tuple(c.tokens) for c in ref]
+    assert [_commit_key(e) for e in ev] == [_commit_key(e) for e in ref_ev]
+    assert blocks == ref_blocks
+
+
+def test_generate_megatick_parity(setup):
+    """The offline generate() path: megatick_k fuses the whole denoising
+    trajectory into ceil(total/K) dispatches with bit-identical output."""
+    cfg, model, params = setup
+    dcfg = _dcfg()
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                cfg.vocab - 2)
+    ref = diffusion.generate(model, params, prompt, dcfg,
+                             rng=jax.random.PRNGKey(5))
+    for k in (2, 8):
+        out = diffusion.generate(model, params, prompt, dcfg,
+                                 rng=jax.random.PRNGKey(5), megatick_k=k)
+        assert jnp.array_equal(out, ref), k
+
+
+# ---------------------------------------------------------------------------
+# SlowFast early-exit inside a megastep
+# ---------------------------------------------------------------------------
+
+def test_slowfast_early_exit_partial_megastep(setup):
+    """A SlowFast policy firing mid-megastep must exit the while_loop early
+    (fewer device iterations than requested) yet keep the replayed tick
+    numbering contiguous and the early_exits counter identical to K=1."""
+    cfg, model, params = setup
+    dcfg = _dcfg()
+    pol = lambda: SlowFastPolicy(threshold=0.0)   # always fire after tick 0
+    ref_eng, ref, ref_ev, _ = _run(model, params, dcfg, _reqs(cfg),
+                                   policy=pol())
+    eng, out, ev, _ = _run(model, params, dcfg, _reqs(cfg), policy=pol(),
+                           megatick_k=4)
+    assert [tuple(c.tokens) for c in out] == [tuple(c.tokens) for c in ref]
+    assert [_commit_key(e) for e in ev] == [_commit_key(e) for e in ref_ev]
+    assert eng.policy.early_exits == ref_eng.policy.early_exits > 0
+    ticks = [e.tick for e in ev]
+    assert sorted(set(ticks)) == list(range(min(ticks), max(ticks) + 1))
+    # early exit actually cut the trajectory short vs the fixed schedule
+    full = (16 // 8) * 4 * len(ref) // 2
+    assert eng.ticks_total < full
+
+
+# ---------------------------------------------------------------------------
+# host_syncs_elided accounting (bugfix satellite)
+# ---------------------------------------------------------------------------
+
+def test_host_sync_elided_when_no_sinks(setup):
+    """K=1 engines skip the mask-mirror canvas fetch entirely when no
+    request registered an on_commit sink, and count each skip."""
+    cfg, model, params = setup
+    dcfg = _dcfg()
+    eng, out, ev, _ = _run(model, params, dcfg, _reqs(cfg, n=2), sinks=False)
+    assert not ev
+    # every tick elides the fetch except the last: the release path needs
+    # the final canvas regardless of sinks (both requests finish together)
+    assert eng.host_syncs_elided == eng.ticks_total - 1 > 0
+    # tokens still come out whole via the release-path fetch
+    assert all((c.tokens[c.prompt_len:] != cfg.mask_id).all() for c in out)
+    exposition = eng.obs.registry.expose()
+    assert "dllm_host_syncs_elided_total" in exposition
+
+
+def test_megastep_sync_accounting(setup):
+    """An n-tick megastep pays exactly one sync: n-1 elided always, plus
+    the commit-buffer canvas fetch elided too when no sinks exist."""
+    cfg, model, params = setup
+    dcfg = _dcfg()
+    eng, _, _, _ = _run(model, params, dcfg, _reqs(cfg, n=2),
+                        megatick_k=8, sinks=False)
+    assert eng.host_syncs_elided == eng.ticks_total  # (n-1) + 1 per megastep
+    eng2, _, ev, _ = _run(model, params, dcfg, _reqs(cfg, n=2), megatick_k=8)
+    assert ev
+    assert 0 < eng2.host_syncs_elided < eng2.ticks_total
+
+
+# ---------------------------------------------------------------------------
+# Engine knob semantics
+# ---------------------------------------------------------------------------
+
+def test_tick_max_ticks_caps_megastep(setup):
+    """tick(max_ticks=n) bounds the productive ticks of one megastep —
+    what --profile-ticks uses to land on an exact tick budget."""
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, _dcfg(), num_slots=2, max_seq_len=24,
+                        mode="none", rng=jax.random.PRNGKey(7), megatick_k=8)
+    for r in _reqs(cfg, n=1):
+        eng.submit(r)
+    eng.warmup()
+    eng.tick(max_ticks=3)
+    assert eng.ticks_total == 3
+    eng.tick()
+    assert eng.ticks_total == 8   # remaining 5 of the 8-tick trajectory
+
+
+def test_megatick_rejects_incompatible_configs(setup):
+    cfg, model, params = setup
+    with pytest.raises(ValueError):
+        ServingEngine(model, params, _dcfg(), num_slots=2, max_seq_len=24,
+                      megatick_k=0)
+    with pytest.raises(ValueError):   # per-stage breakdown needs 2 dispatches
+        ServingEngine(model, params, _dcfg(), num_slots=2, max_seq_len=24,
+                      megatick_k=4, breakdown=True)
+
+    class WeirdPolicy(Policy):
+        name = "weird"
+
+        def step_k(self, slot, tick_idx, default_k, schedule):
+            return default_k
+
+    with pytest.raises(ValueError):   # host step_k override can't be fused
+        ServingEngine(model, params, _dcfg(), num_slots=2, max_seq_len=24,
+                      megatick_k=4, policy=WeirdPolicy())
+
+
+def test_megatick_state_defaults():
+    st = diffusion.megatick_state(np.array([3, 5]), np.array([2, 2]),
+                                  _dcfg())
+    assert st["block_masks_left"].tolist() == [8, 8]
+    assert st["active"].tolist() == [True, True]
+    assert np.all(np.isinf(np.asarray(st["last_conf"])))
