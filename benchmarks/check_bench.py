@@ -194,6 +194,39 @@ def _check_megatick(b: dict) -> List[Check]:
     return out
 
 
+def _check_analysis(b: dict) -> List[Check]:
+    """``python -m repro.analysis --json`` payload: the static-analysis
+    gate folded into the trajectory table.  The violations column must be
+    0 — every finding is either fixed or carries a reviewed allowlist
+    entry (docs/static_analysis.md)."""
+    out: List[Check] = [
+        ("analysis_violations", b["violations"], b["violations"] == 0),
+    ]
+    for name, p in sorted(b["passes"].items()):
+        out.append((name,
+                    f"checked={p['checked']} "
+                    f"suppressed={len(p['suppressed'])}", p["ok"]))
+    sram = b["passes"].get("sram_budget", {}).get("info", {})
+    xv = sram.get("crossval")
+    if xv:
+        lo, hi = xv["band"]
+        out.append(("sram_crossval_ratio",
+                    f"{xv['ratio']:.3f} in [{lo}, {hi}]",
+                    bool(lo <= xv["ratio"] <= hi and xv["sram_ok"])))
+    kernels = sram.get("kernels", {})
+    if kernels:
+        worst = max(kernels.items(), key=lambda kv: kv[1]["utilization"])
+        out.append(("sram_worst_utilization",
+                    f"{worst[0]}={worst[1]['utilization']:.1%}",
+                    worst[1]["utilization"] <= 1.0))
+    rc = b["passes"].get("jaxpr_audit", {}).get("info", {}) \
+        .get("recompilation")
+    if rc:
+        out.append(("recompile_cache_entries", rc["cache_entries"], None))
+    out.append(("allowlist_entries", b["allowlist"]["entries"], None))
+    return out
+
+
 CHECKS: Dict[str, Callable[[dict], List[Check]]] = {
     "fused_head": _check_fused_head,
     "sharded_tick": _check_sharded_tick,
@@ -201,6 +234,7 @@ CHECKS: Dict[str, Callable[[dict], List[Check]]] = {
     "serve_stream": _check_serve_stream,
     "obs_overhead": _check_obs_overhead,
     "megatick": _check_megatick,
+    "analysis": _check_analysis,
 }
 
 

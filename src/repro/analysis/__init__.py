@@ -1,0 +1,29 @@
+"""Static checks gating CI (docs/static_analysis.md).
+
+Four passes enforce the invariants the paper's design argument rests on —
+invariants runtime benchmarks only catch late and noisily:
+
+  * ``jaxpr_audit``  — jit hygiene of every registered jitted entry point:
+    no callback primitives, declared buffer donation actually lowered to
+    input/output aliasing, per-tick host<->device operand counts bounded,
+    collectives only on declared mesh axes, and a recompilation guard
+    bounding distinct jit-cache entries over a representative engine
+    shape trace.
+  * ``sram_budget``  — static tile+scratch accounting for each Pallas
+    kernel against the ``sim.isa.NPUConfig`` SRAM capacity, cross-checked
+    against ``sim.cycle``'s exact-fit allocator so the simulator and the
+    real kernels cannot silently diverge on the SRAM-fit claim.
+  * ``hotpath_lint`` — AST rules over ``src/``: host syncs inside
+    registered hot paths, ``time.time()`` where ``perf_counter`` is
+    required, rng-key reuse, bare ``assert`` in library code.
+  * ``locks``        — lock-discipline extraction over the threaded
+    serving/obs modules: fields written both with and without their
+    guarding lock, and lock-order cycles.
+
+Run ``python -m repro.analysis --check`` (the CI gate); entry points and
+budgets live in :mod:`repro.analysis.registry`; intentional exceptions go
+through the reviewed ``allowlist.txt`` next to this file.
+"""
+from repro.analysis.report import Allowlist, PassResult, Violation
+
+__all__ = ["Allowlist", "PassResult", "Violation"]

@@ -1,0 +1,87 @@
+"""CLI for the static-analysis gate (docs/static_analysis.md).
+
+    PYTHONPATH=src python -m repro.analysis [--check] [--json PATH]
+        [--passes hotpath_lint,locks,sram_budget,jaxpr_audit]
+        [--allowlist PATH] [--no-recompile-guard] [--no-crossval]
+
+``--check`` exits 1 on any violation (the CI gate); the JSON payload
+carries ``benchmark: "analysis"`` so ``benchmarks/check_bench.py`` folds
+an analysis-violations column into the perf-trajectory table.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from repro.analysis import report as report_lib
+from repro.analysis import registry
+
+PASS_NAMES = ("hotpath_lint", "locks", "sram_budget", "jaxpr_audit")
+
+
+def run_passes(names: List[str], allow: report_lib.Allowlist,
+               recompile: bool = True, crossval: bool = True
+               ) -> List[report_lib.PassResult]:
+    results = []
+    for name in names:
+        if name == "hotpath_lint":
+            from repro.analysis import hotpath_lint
+            results.append(hotpath_lint.run(allow))
+        elif name == "locks":
+            from repro.analysis import locks
+            results.append(locks.run(allow))
+        elif name == "sram_budget":
+            from repro.analysis import sram_budget
+            results.append(sram_budget.run(allow, crossval=crossval))
+        elif name == "jaxpr_audit":
+            from repro.analysis import jaxpr_audit
+            results.append(jaxpr_audit.run(allow, recompile=recompile))
+        else:
+            raise SystemExit(f"unknown pass {name!r}; "
+                             f"have {', '.join(PASS_NAMES)}")
+    return results
+
+
+def main(argv: List[str] = None) -> int:
+    p = argparse.ArgumentParser(prog="python -m repro.analysis",
+                                description=__doc__)
+    p.add_argument("--check", action="store_true",
+                   help="exit 1 on any violation (CI gate)")
+    p.add_argument("--json", metavar="PATH",
+                   help="write the full JSON report")
+    p.add_argument("--passes", default=",".join(PASS_NAMES),
+                   help="comma-separated subset of passes to run")
+    p.add_argument("--allowlist",
+                   default=registry.default_allowlist_path(),
+                   help="reviewed-exception file (default: the package's "
+                        "allowlist.txt)")
+    p.add_argument("--no-recompile-guard", action="store_true",
+                   help="skip the compile-and-replay recompilation guard "
+                        "(the one check that runs real executables)")
+    p.add_argument("--no-crossval", action="store_true",
+                   help="skip the SRAM cross-check against the cycle "
+                        "simulator's allocator")
+    args = p.parse_args(argv)
+
+    names = [n.strip() for n in args.passes.split(",") if n.strip()]
+    allow = (report_lib.Allowlist.load(args.allowlist)
+             if os.path.exists(args.allowlist)
+             else report_lib.Allowlist(path=args.allowlist))
+    results = run_passes(names, allow,
+                         recompile=not args.no_recompile_guard,
+                         crossval=not args.no_crossval)
+    payload = report_lib.assemble(results, allow,
+                                  full_run=set(names) >= set(PASS_NAMES))
+    print(report_lib.render(payload))
+    if args.json:
+        report_lib.save_json(payload, args.json)
+        print(f"report written to {args.json}")
+    if args.check and payload["violations"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,256 @@
+"""AST hot-path lint: repo-specific source rules over ``src/``.
+
+Rules (allowlist keys use ``rule:relpath::qualname``):
+
+  * ``ANL-HOSTSYNC`` — host-synchronizing calls inside registered hot
+    paths (functions whose bodies run under jax tracing,
+    ``registry.HOT_PATHS``): ``.item()`` / ``.tolist()`` /
+    ``block_until_ready`` / ``jax.device_get`` / any ``numpy`` call /
+    ``float()``/``int()`` on a bare variable.  Inside traced code these
+    either force a device round-trip per call or silently constant-fold a
+    traced value.
+  * ``ANL-TIME`` — ``time.time()`` anywhere in the library: every
+    duration in this repo is measured; wall-clock is not monotonic and
+    steps under NTP.  Use ``time.perf_counter()``.
+  * ``ANL-RNG`` — the same PRNG key consumed by two ``jax.random``
+    draws without an intervening ``split``/reassignment (function-local;
+    keys passed into helpers are checked inside the helper).
+  * ``ANL-ASSERT`` — bare ``assert`` in library code: stripped under
+    ``python -O`` and raises the wrong exception type for callers.
+    Raise ``ValueError`` (the DiffusionConfig.num_blocks precedent).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import registry
+from repro.analysis.report import Allowlist, PassResult, Violation
+
+# jax.random functions that do NOT consume a key's uniqueness
+_RNG_NON_CONSUMING = {
+    "split", "fold_in", "PRNGKey", "key", "key_data", "wrap_key_data",
+    "clone", "key_impl",
+}
+# method names whose call forces a device->host copy
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+# jax module-level host-sync functions
+_JAX_SYNC_FUNCS = {"device_get", "block_until_ready"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _ModuleIndex(ast.NodeVisitor):
+    """Import aliases for numpy / jax / time / jax.random."""
+
+    def __init__(self):
+        self.numpy: Set[str] = set()
+        self.jax: Set[str] = set()
+        self.time_mod: Set[str] = set()
+        self.time_func: Set[str] = set()     # from time import time [as t]
+        self.jax_random: Set[str] = set()
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            name = a.asname or a.name
+            if a.name == "numpy":
+                self.numpy.add(name)
+            elif a.name == "jax":
+                self.jax.add(name)
+            elif a.name == "time":
+                self.time_mod.add(name)
+            elif a.name == "jax.random":
+                self.jax_random.add(name)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        for a in node.names:
+            name = a.asname or a.name
+            if node.module == "time" and a.name == "time":
+                self.time_func.add(name)
+            elif node.module == "jax" and a.name == "random":
+                self.jax_random.add(name)
+            elif node.module == "jax" and a.name == "numpy":
+                pass                           # jnp — device-side, fine
+
+
+def _qualname_functions(tree: ast.Module
+                        ) -> List[Tuple[str, str, ast.AST]]:
+    """(qualname, toplevel_name, node) for every top-level function and
+    every method of a top-level class."""
+    out = []
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.append((node.name, node.name, node))
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    out.append((f"{node.name}.{sub.name}", node.name, sub))
+    return out
+
+
+def _is_hot(relpath: str, toplevel: str) -> bool:
+    spec = registry.HOT_PATHS.get(relpath)
+    if spec is None:
+        return False
+    return spec == "*" or toplevel in spec
+
+
+def _check_hostsync(fn: ast.AST, idx: _ModuleIndex, where: str
+                    ) -> List[Violation]:
+    out = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        line = node.lineno
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            # x.item() / x.tolist() / x.block_until_ready()
+            if f.attr in _SYNC_METHODS:
+                out.append(Violation(
+                    "ANL-HOSTSYNC", where,
+                    f"line {line}: .{f.attr}() forces a device sync "
+                    f"inside a jax-traced hot path"))
+                continue
+            dotted = _dotted(f)
+            if dotted is None:
+                continue
+            root, _, rest = dotted.partition(".")
+            if root in idx.numpy:
+                out.append(Violation(
+                    "ANL-HOSTSYNC", where,
+                    f"line {line}: numpy call {dotted}() in a hot path "
+                    f"pulls traced values to host (use jnp)"))
+            elif root in idx.jax and rest in _JAX_SYNC_FUNCS:
+                out.append(Violation(
+                    "ANL-HOSTSYNC", where,
+                    f"line {line}: {dotted}() blocks on device work "
+                    f"inside a hot path"))
+        elif (isinstance(f, ast.Name) and f.id in ("float", "int")
+              and len(node.args) == 1 and not node.keywords
+              and isinstance(node.args[0], ast.Name)):
+            out.append(Violation(
+                "ANL-HOSTSYNC", where,
+                f"line {line}: {f.id}({node.args[0].id}) on a variable in "
+                f"a hot path — a traced array here is a silent sync"))
+    return out
+
+
+def _check_rng_reuse(fn: ast.AST, idx: _ModuleIndex, where: str
+                     ) -> List[Violation]:
+    """Flag a key variable consumed by two jax.random draws with no
+    reassignment between them (source order)."""
+    events: List[Tuple[int, str, str, int]] = []   # (line, kind, name, col)
+
+    def assigned_names(target: ast.AST) -> List[str]:
+        if isinstance(target, ast.Name):
+            return [target.id]
+        if isinstance(target, (ast.Tuple, ast.List)):
+            out = []
+            for e in target.elts:
+                out.extend(assigned_names(e))
+            return out
+        return []
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                for name in assigned_names(t):
+                    events.append((node.lineno, "assign", name,
+                                   node.col_offset))
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            for name in assigned_names(node.target):
+                events.append((node.lineno, "assign", name,
+                               node.col_offset))
+        elif isinstance(node, ast.Call):
+            dotted = _dotted(node.func)
+            if dotted is None:
+                continue
+            root, _, rest = dotted.partition(".")
+            consuming = (
+                (root in idx.jax and rest.startswith("random.")
+                 and rest.split(".")[-1] not in _RNG_NON_CONSUMING)
+                or (root in idx.jax_random and "." not in rest
+                    and rest not in _RNG_NON_CONSUMING and rest))
+            if consuming and node.args \
+                    and isinstance(node.args[0], ast.Name):
+                events.append((node.lineno, "consume", node.args[0].id,
+                               node.col_offset))
+            # a split() whose operand is reassigned shows up as an assign
+    events.sort()
+    out = []
+    consumed_at: Dict[str, int] = {}
+    for line, kind, name, _ in events:
+        if kind == "assign":
+            consumed_at.pop(name, None)
+        elif name in consumed_at:
+            out.append(Violation(
+                "ANL-RNG", where,
+                f"line {line}: key {name!r} already consumed at line "
+                f"{consumed_at[name]} — split it before drawing again"))
+        else:
+            consumed_at[name] = line
+    return out
+
+
+def lint_source(relpath: str, source: str) -> Tuple[List[Violation], int]:
+    """All rules over one module; returns (violations, n_functions)."""
+    tree = ast.parse(source, filename=relpath)
+    idx = _ModuleIndex()
+    idx.visit(tree)
+    out: List[Violation] = []
+
+    # module-wide rules ---------------------------------------------------
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert):
+            out.append(Violation(
+                "ANL-ASSERT", f"{relpath}::module",
+                f"line {node.lineno}: bare assert in library code — "
+                f"raise ValueError instead (stripped under -O)"))
+        elif isinstance(node, ast.Call):
+            dotted = _dotted(node.func)
+            if dotted is None:
+                continue
+            root, _, rest = dotted.partition(".")
+            if (root in idx.time_mod and rest == "time") \
+                    or (not rest and root in idx.time_func):
+                out.append(Violation(
+                    "ANL-TIME", f"{relpath}::module",
+                    f"line {node.lineno}: time.time() — durations must "
+                    f"use the monotonic time.perf_counter()"))
+
+    # hot-path rules ------------------------------------------------------
+    fns = _qualname_functions(tree)
+    for qual, toplevel, fn in fns:
+        if not _is_hot(relpath, toplevel):
+            continue
+        where = f"{relpath}::{qual}"
+        out.extend(_check_hostsync(fn, idx, where))
+        out.extend(_check_rng_reuse(fn, idx, where))
+    return out, len(fns)
+
+
+def run(allow: Allowlist, files: Optional[List[str]] = None) -> PassResult:
+    files = registry.src_files() if files is None else files
+    violations: List[Violation] = []
+    checked = 0
+    for rel in files:
+        with open(registry.abspath(rel)) as f:
+            src = f.read()
+        vs, n = lint_source(rel, src)
+        violations.extend(vs)
+        checked += n
+    kept, suppressed = allow.filter(violations)
+    return PassResult("hotpath_lint", kept, suppressed,
+                      info={"files": len(files),
+                            "hot_modules": len(registry.HOT_PATHS)},
+                      checked=checked)

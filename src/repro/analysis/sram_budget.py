@@ -1,0 +1,118 @@
+"""SRAM/VMEM budget checker for the Pallas kernels.
+
+Two checks per run:
+
+  * ``ANL-SRAM-BUDGET`` — each kernel's per-grid-step working set
+    (double-buffered in/out blocks + scratch, from
+    ``registry.kernel_specs``) must fit the ``sim.isa.NPUConfig`` SRAM
+    capacity at production LLaDA-8B scale.  This is the paper's central
+    claim — vocab-wide logits never leave on-chip memory — checked
+    before a single cycle runs.
+  * ``ANL-SRAM-XVAL`` — the static fused-head footprint, computed in the
+    trace's modeled storage formats, must agree with the cycle
+    simulator's exact-fit allocator peak over a real captured sampling
+    trace within ``registry.SRAM_CROSSVAL_BAND``.  A kernel BlockSpec
+    change that the simulator's emission hooks don't follow (or vice
+    versa) lands here, not in a silently wrong Table-4 number.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.analysis import registry
+from repro.analysis.report import Allowlist, PassResult, Violation
+
+
+def check_budgets(specs: Optional[List[registry.KernelSpec]] = None,
+                  sram_bytes: Optional[int] = None
+                  ) -> tuple:
+    """(violations, per-kernel footprint table)."""
+    from repro.sim import isa
+
+    npu = isa.NPUConfig()
+    cap = npu.sram_bytes if sram_bytes is None else sram_bytes
+    specs = registry.kernel_specs() if specs is None else specs
+    violations: List[Violation] = []
+    table = {}
+    for spec in specs:
+        total = spec.total_bytes
+        table[spec.name] = {
+            "point": spec.point,
+            "buffers": spec.footprint(),
+            "total_bytes": total,
+            "capacity_bytes": cap,
+            "utilization": round(total / cap, 4),
+        }
+        if total > cap:
+            biggest = max(spec.footprint().items(), key=lambda kv: kv[1])
+            violations.append(Violation(
+                "ANL-SRAM-BUDGET", spec.name,
+                f"per-grid-step working set {total} B exceeds SRAM "
+                f"capacity {cap} B at {spec.point} "
+                f"(largest buffer: {biggest[0]}={biggest[1]} B)"))
+    return violations, table
+
+
+def static_stream_peak(B: int, L: int, V: int, d: int,
+                       chunk_v: int = 4096) -> int:
+    """Fused-head stream peak in the trace's modeled storage formats:
+    carry (3, R) fp32 + one live (d, chunk) weight slab
+    (``sampling.TRACE_W_FMT``) + one (TILE_R, chunk) fp32 logit tile —
+    the same buffers ``core.sampling._emit_head_stream`` allocs/frees, so
+    this is the footprint the exact-fit allocator should observe."""
+    from repro.core import sampling
+    from repro.sim import isa
+
+    R = B * L
+    chunk, _ = sampling._chunk_grid(V, chunk_v)
+    w = isa.BYTES[sampling.TRACE_W_FMT]
+    f32 = isa.BYTES["fp32"]
+    return int(3 * R * f32 + d * chunk * w + isa.TILE_R * chunk * f32)
+
+
+def crossval_allocator(B: int = 8, L: int = 32, V: int = 126464,
+                       d: int = 4096) -> tuple:
+    """(violations, info): capture a production-scale fused sampling trace
+    (shape-only — no weights allocated) and band-compare the allocator's
+    peak against :func:`static_stream_peak`."""
+    from repro.sim import cycle, isa, trace
+
+    tr = trace.capture_sampling_trace(B=B, L=L, V=V, d=d,
+                                      head_path="fused")
+    sim = cycle.simulate(tr, isa.NPUConfig())
+    static = static_stream_peak(B, L, V, d)
+    lo, hi = registry.SRAM_CROSSVAL_BAND
+    ratio = static / sim.sram_peak_bytes if sim.sram_peak_bytes else 0.0
+    violations: List[Violation] = []
+    if not (lo <= ratio <= hi):
+        violations.append(Violation(
+            "ANL-SRAM-XVAL", "fused_head_sampling",
+            f"static stream peak {static} B vs allocator peak "
+            f"{sim.sram_peak_bytes:.0f} B (ratio {ratio:.3f} outside "
+            f"[{lo}, {hi}]) — kernel accounting and sim emission hooks "
+            f"have diverged"))
+    if not sim.sram_ok:
+        violations.append(Violation(
+            "ANL-SRAM-XVAL", "fused_head_sampling",
+            f"allocator overflowed by {sim.sram_overflow_bytes:.0f} B on "
+            f"the production trace — the streamed head no longer fits "
+            f"SRAM"))
+    info = {"static_peak_bytes": static,
+            "allocator_peak_bytes": sim.sram_peak_bytes,
+            "ratio": round(ratio, 4),
+            "band": [lo, hi],
+            "sram_ok": sim.sram_ok,
+            "point": {"B": B, "L": L, "V": V, "d": d}}
+    return violations, info
+
+
+def run(allow: Allowlist, crossval: bool = True) -> PassResult:
+    violations, table = check_budgets()
+    info = {"kernels": table}
+    if crossval:
+        vs, xv = crossval_allocator()
+        violations.extend(vs)
+        info["crossval"] = xv
+    kept, suppressed = allow.filter(violations)
+    return PassResult("sram_budget", kept, suppressed, info=info,
+                      checked=len(table))

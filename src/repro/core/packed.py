@@ -45,7 +45,9 @@ def _block_codes(x: jax.Array, fmt: mx.MXFormat, block: int):
 def pack(x: jax.Array, fmt_name: str = "mxint4", block: int = 32
          ) -> PackedMX:
     fmt = mx.FORMATS[fmt_name]
-    assert fmt.is_int, "packed storage implemented for MXINT formats"
+    if not fmt.is_int:
+        raise ValueError(
+            f"packed storage implemented for MXINT formats; got {fmt_name}")
     codes, exp = _block_codes(x, fmt, block)
     flat = codes.reshape(*codes.shape[:-2], -1)     # (..., nb*block)
     if fmt.element_bits == 4:

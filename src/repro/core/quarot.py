@@ -25,7 +25,8 @@ from repro.core import mx
 @functools.lru_cache(maxsize=16)
 def hadamard_matrix(dim: int, seed: int = 0) -> np.ndarray:
     """Sylvester Hadamard (dim must be a power of two) with random signs."""
-    assert dim & (dim - 1) == 0, f"head_dim {dim} must be a power of 2"
+    if dim & (dim - 1):
+        raise ValueError(f"head_dim {dim} must be a power of 2")
     h = np.array([[1.0]])
     while h.shape[0] < dim:
         h = np.block([[h, h], [h, -h]])

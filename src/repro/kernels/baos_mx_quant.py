@@ -63,7 +63,8 @@ def baos_mx_quant(x: jax.Array, center: jax.Array, scale: jax.Array, *,
                   tile_s: int = 128, interpret: bool = False) -> jax.Array:
     """x (G, S, D); center/scale (G, 1, D) -> smoothed fake-quant (G, S, D)."""
     G, S, D = x.shape
-    assert D % block == 0, f"head_dim {D} must be a multiple of {block}"
+    if D % block:
+        raise ValueError(f"head_dim {D} must be a multiple of {block}")
     fmt = mx_lib.FORMATS[fmt_name]
     tile = min(tile_s, S)
     pad_s = (-S) % tile

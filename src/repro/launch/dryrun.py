@@ -200,7 +200,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "chips": int(np.prod(mesh.devices.shape)),
         "status": "error",
     }
-    t0 = time.time()
+    t0 = time.perf_counter()
     with shlib.use_context(mesh, rules):
         specs = steps_lib.input_specs(model, shape, policy)
         shardings = steps_lib.input_shardings(model, shape, mesh, specs,
@@ -216,9 +216,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         jitted = jax.jit(step_fn, in_shardings=in_shardings,
                          donate_argnums=donate_args)
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
         cost = compiled.cost_analysis() or {}
         try:
@@ -340,13 +340,13 @@ def main():
                 print(f"[skip] {tag}")
                 continue
         print(f"[run ] {tag}", flush=True)
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             rec = run_cell(arch, shape, mp, variant=args.variant)
         except Exception:
             rec = {"arch": arch, "shape": shape, "multi_pod": mp,
                    "status": "error", "traceback": traceback.format_exc()}
-        rec["wall_s"] = round(time.time() - t0, 2)
+        rec["wall_s"] = round(time.perf_counter() - t0, 2)
         out.write_text(json.dumps(rec, indent=2, default=float))
         print(f"[done] {tag}: {rec['status']} ({rec['wall_s']}s) "
               f"bottleneck={rec.get('bottleneck')}", flush=True)

@@ -162,7 +162,8 @@ def run_legacy(args, cfg, model, params, dcfg, mesh=None) -> None:
         print(f"request {req}: {gen_tokens} tokens in {dt:.2f}s "
               f"({gen_tokens/dt:.1f} tok/s) [{tag}]")
         masks_left = int(jnp.sum(out[:, args.prompt_len:] == cfg.mask_id))
-        assert masks_left == 0, f"{masks_left} positions left masked"
+        if masks_left:
+            raise RuntimeError(f"{masks_left} positions left masked")
     if t_total > 0:
         print(f"steady-state TPS: {total_tokens / t_total:.1f} "
               f"(cache={args.cache}, baos={not args.no_baos}, "
@@ -243,10 +244,13 @@ def run_engine(args, cfg, model, params, dcfg, mesh=None) -> None:
     for c in completed[: min(8, len(completed))]:
         print(f"request {c.uid}: P={c.prompt_len} gen={c.gen_length} "
               f"ticks={c.ticks} latency={c.latency*1e3:.1f}ms")
-    assert len(completed) == len(reqs), "engine dropped requests"
+    if len(completed) != len(reqs):
+        raise RuntimeError(f"engine dropped requests: {len(completed)} "
+                           f"completed of {len(reqs)}")
     for c in completed:
         n_masked = int((c.tokens[c.prompt_len:] == cfg.mask_id).sum())
-        assert n_masked == 0, f"request {c.uid}: {n_masked} masks left"
+        if n_masked:
+            raise RuntimeError(f"request {c.uid}: {n_masked} masks left")
     print(f"engine: slots={num_slots} mode={args.mode} "
           f"policy={policy.name} pool={eng.pool.stats()}"
           + (f" mesh={dict(mesh.shape)}" if mesh is not None else ""))

@@ -96,10 +96,10 @@ def main(argv=None):
             print(f"step {step:5d} loss {loss:8.4f} "
                   f"lr {float(metrics['lr']):.2e} {dt*1000:7.1f} ms")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     rt.run(batches, args.steps, on_metrics)
     batches.close()
-    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s; "
+    print(f"done: {args.steps} steps in {time.perf_counter()-t0:.1f}s; "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
           f"restarts={rt.restarts} stragglers={len(rt.straggler_events)}")
     return losses

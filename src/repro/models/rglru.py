@@ -178,7 +178,10 @@ class GriffinModel:
 
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
-        assert cfg.n_layers % 3 == 2, "expect 3k+2 layers (rec,rec,attn)*k + 2"
+        if cfg.n_layers % 3 != 2:
+            raise ValueError(
+                f"expect 3k+2 layers (rec,rec,attn)*k + 2; "
+                f"got n_layers={cfg.n_layers}")
         self.n_triples = cfg.n_layers // 3
 
     # -- params ------------------------------------------------------------

@@ -52,7 +52,8 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
     """
     b, s, h, p = x.shape
     g, n = B.shape[2], B.shape[3]
-    assert s % chunk == 0, f"seq {s} not a multiple of ssd chunk {chunk}"
+    if s % chunk:
+        raise ValueError(f"seq {s} not a multiple of ssd chunk {chunk}")
     nc = s // chunk
     rep = h // g
 

@@ -100,7 +100,7 @@ class TrainRuntime:
         for batch in batches:
             if self.step >= num_steps:
                 return
-            t0 = time.time()
+            t0 = time.perf_counter()
             if self.injector is not None:
                 self.injector.maybe_fail(self.step)
             out = self.step_fn(self.state, batch, self.step)
@@ -112,7 +112,7 @@ class TrainRuntime:
                 if not np.isfinite(loss):
                     raise FloatingPointError(
                         f"non-finite loss {loss} at step {self.step}")
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             self._watch_straggler(dt)
             self.step += 1
             if self.step % self.cfg.ckpt_every == 0:

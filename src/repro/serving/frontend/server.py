@@ -278,7 +278,9 @@ class ServeFrontend:
                              protocol.error_payload("overloaded",
                                                     ev.reason)))
                 break
-            assert isinstance(ev, CommitEvent)
+            if not isinstance(ev, CommitEvent):
+                raise TypeError(f"unexpected event on request stream: "
+                                f"{type(ev).__name__}")
             ticks += 1
             if len(ev.positions):
                 if ttft is None:
