@@ -194,6 +194,35 @@ def _check_megatick(b: dict) -> List[Check]:
     return out
 
 
+def _check_paged_cache(b: dict) -> List[Check]:
+    p, g = b["parity"], b["goodput"]
+    out: List[Check] = [
+        # slot vs paged must be bit-identical: tokens AND commit streams,
+        # per (cache mode, megatick depth) config
+        ("parity_all_equal", p["all_equal"], p["all_equal"] is True),
+    ]
+    for c in p["configs"]:
+        tag = f"{c['mode']}_k{c['megatick_k']}"
+        out.append((f"parity_{tag}",
+                    f"tokens={c['tokens_equal']} events={c['events_equal']}",
+                    c["tokens_equal"] and c["events_equal"]))
+    out += [
+        # the tentpole floor: same page budget, prefix-heavy trace —
+        # radix dedup must buy >= 1.3x goodput over whole-row slots
+        ("goodput_ratio", f"{g['goodput_ratio']:.2f}x",
+         g["goodput_ratio"] >= 1.3),
+        ("prefix_hit_rate", f"{g['paged']['prefix_hit_rate']:.2f}",
+         g["paged"]["prefix_hit_rate"] > 0.0),
+        # the paged pool must actually stay inside the shared budget
+        ("peak_pages_in_use",
+         f"{g['paged']['peak_pages_in_use']}/{g['page_budget']}",
+         g["paged"]["peak_pages_in_use"] <= g["page_budget"]),
+        ("slot_vs_paged_slots",
+         f"{g['slot']['num_slots']} vs {g['paged']['num_slots']}", None),
+    ]
+    return out
+
+
 def _check_analysis(b: dict) -> List[Check]:
     """``python -m repro.analysis --json`` payload: the static-analysis
     gate folded into the trajectory table.  The violations column must be
@@ -234,6 +263,7 @@ CHECKS: Dict[str, Callable[[dict], List[Check]]] = {
     "serve_stream": _check_serve_stream,
     "obs_overhead": _check_obs_overhead,
     "megatick": _check_megatick,
+    "paged_cache": _check_paged_cache,
     "analysis": _check_analysis,
 }
 

@@ -28,6 +28,10 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
                        metrics vs traced engine ticks, direct per-tick
                        hook cost (<2% gate) + live drift-monitor bands
                        (emits BENCH_obs_overhead.json)
+  paged_cache          paged block pool vs slot pool: bit-parity across
+                       cache modes/megatick depths + prefix-sharing
+                       goodput at a fixed page budget
+                       (emits BENCH_paged_cache.json)
 
 ``check_bench`` (not listed: it is the CI gate, not a benchmark) validates
 every emitted BENCH_*.json afterwards.
@@ -57,7 +61,7 @@ MODULES = [
     "table3_pipeline", "table4_crossval", "table5_quant",
     "table6_end2end", "fig9_dse", "roofline_report", "serve_engine",
     "fused_head", "sharded_tick", "cycle_sim", "serve_stream",
-    "obs_overhead",
+    "obs_overhead", "paged_cache",
 ]
 
 

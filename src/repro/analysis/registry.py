@@ -53,6 +53,9 @@ HOT_PATHS: Dict[str, object] = {
         "_cached_commit_fn", "_cached_step_fn", "tick_forward",
         "tick_sample", "batched_tick", "get_tick_fn", "get_spmd_tick_fn",
         "megatick_state", "get_megatick_fn", "get_tick_stage_fns",
+        "gather_canvas_rows", "scatter_canvas_rows", "_gather_pages_axis1",
+        "_scatter_pages_axis1", "gather_cache_rows", "scatter_cache_rows",
+        "get_paged_tick_fn", "get_paged_megatick_fn",
     },
     "repro/core/sampling.py": "*",
     "repro/kernels/fused_head_sampling.py": "*",
@@ -332,6 +335,36 @@ def entry_points() -> List[EntryPoint]:
         jitted=diffusion.get_megatick_fn.__wrapped__(
             model, dcfg, mask_id, k_max, mesh=mesh, jit_steps=True),
         min_aliased=1))
+
+    # -- paged tick/megatick: block-table gather -> tick body -> scatter --
+    ps = 8
+    R = s_tot // ps
+    n_pages = 1 + B * R                     # page 0 reserved null
+    table = sds((B, R), "int32")
+    pages = sds((n_pages, ps), "int32")
+    ptick = diffusion.get_paged_tick_fn.__wrapped__(
+        model, dcfg, mask_id, ps, s_tot, with_cache=False, jit_steps=False)
+    eps.append(EntryPoint(
+        "paged_tick", ptick,
+        (params, pages, None, table, table, c["kv_valid"], c["bs"],
+         c["k"], c["srng"]),
+        # params, page store, cache, both block-table mirrors, kv_valid
+        resident_argnums=(0, 1, 2, 3, 4, 5),
+        max_h2d=4, max_d2h=7))
+
+    pmega = diffusion.get_paged_megatick_fn.__wrapped__(
+        model, dcfg, mask_id, k_max, ps, s_tot, with_cache=False,
+        jit_steps=False)
+    pmega_args = (params, pages, None, table, table, c["kv_valid"], state,
+                  c["srng"], sds((), "int32"), sds((), "bool"))
+    eps.append(EntryPoint(
+        "paged_megatick", pmega, pmega_args,
+        resident_argnums=(0, 1, 2, 3, 4, 5, 6),
+        max_h2d=4, max_d2h=25,
+        jitted=diffusion.get_paged_megatick_fn.__wrapped__(
+            model, dcfg, mask_id, k_max, ps, s_tot, with_cache=False,
+            jit_steps=True),
+        min_aliased=1))                     # donated page store (no cache)
 
     # -- Pallas kernel wrappers (callback-primitive scan only) ------------
     d, v, dh = 64, 257, 16                  # smoke dims

@@ -802,6 +802,196 @@ def get_megatick_fn(model, dcfg: DiffusionConfig, mask_id: int, k_max: int,
             else megatick)
 
 
+# ---------------------------------------------------------------------------
+# Paged block-pool tick: the serving canvas and KV cache live in fixed-size
+# physical pages addressed through per-slot block tables (docs/paged_cache.md).
+# The device math is the *unchanged* batched tick: a paged tick gathers the
+# pages into the dense (B, S) views the tick body expects, runs it, and
+# scatters the results back — so greedy tokens stay bit-identical to the slot
+# pool by construction, across cache modes, meshes, and megatick depths.
+# ---------------------------------------------------------------------------
+
+def paged_cache_layout(model, page_size: int, s_tot: int):
+    """Probe ``model.init_cache``'s leaf layout for the paged pool.
+
+    Returns ``(treedef, paged, batch_axis)`` where ``paged`` and
+    ``batch_axis`` are flat per-leaf lists: ``paged[i]`` is True for leaves
+    carrying a full sequence dimension (these move into page stores) and
+    ``batch_axis[i]`` locates the batch dimension of the remaining per-slot
+    leaves (BAOS calibration rows, recurrent states) for spill/restore.
+    Probing uses ``jax.eval_shape``, so no dense cache is ever allocated.
+    Layouts whose sequence axis is not axis 2 (with batch at axis 1) are
+    rejected — the gather/scatter views assume (stack, batch, seq, ...).
+    """
+    def shapes(batch, s):
+        return jax.eval_shape(lambda: model.init_cache(batch, s))
+
+    base = shapes(2, s_tot)
+    flat_b, treedef = jax.tree_util.tree_flatten(base)
+    flat_g = jax.tree_util.tree_leaves(shapes(2, s_tot + page_size))
+    flat_w = jax.tree_util.tree_leaves(shapes(3, s_tot))
+    paged, batch_axis = [], []
+    for lb, lg, lw in zip(flat_b, flat_g, flat_w):
+        seq_axes = [i for i, (a, b) in enumerate(zip(lb.shape, lg.shape))
+                    if a != b]
+        bat_axes = [i for i, (a, b) in enumerate(zip(lb.shape, lw.shape))
+                    if a != b]
+        if len(bat_axes) != 1:
+            raise ValueError(
+                f"paged pool: cannot locate the batch axis of cache leaf "
+                f"with shape {lb.shape}")
+        if seq_axes:
+            if seq_axes != [2] or bat_axes != [1]:
+                raise ValueError(
+                    f"paged pool supports (stack, batch, seq, ...) cache "
+                    f"leaves only; got shape {lb.shape} with seq axes "
+                    f"{seq_axes}, batch axes {bat_axes}")
+            paged.append(True)
+        else:
+            paged.append(False)
+        batch_axis.append(bat_axes[0])
+    return treedef, paged, batch_axis
+
+
+def gather_canvas_rows(canvas_pages: jax.Array,
+                       canvas_table: jax.Array) -> jax.Array:
+    """(NP, page) canvas pages + (B, R) block table -> dense (B, S) rows."""
+    B, R = canvas_table.shape
+    ps = canvas_pages.shape[1]
+    return jnp.take(canvas_pages, canvas_table.reshape(-1),
+                    axis=0).reshape(B, R * ps)
+
+
+def scatter_canvas_rows(canvas_pages: jax.Array, canvas_table: jax.Array,
+                        rows: jax.Array) -> jax.Array:
+    """Write dense (B, S) rows back through the block table.
+
+    Pages referenced by more than one table entry (shared radix-cached
+    prompt pages, the reserved null page 0) receive identical values from
+    every writer — prompt content never changes and null-mapped tail/idle
+    positions carry the page's own gathered content — so duplicate-index
+    scatter order cannot change the result.
+    """
+    B, R = canvas_table.shape
+    ps = canvas_pages.shape[1]
+    upd = rows.reshape(B * R, ps)
+    return canvas_pages.at[canvas_table.reshape(-1)].set(upd)
+
+
+def _gather_pages_axis1(store: jax.Array, table: jax.Array) -> jax.Array:
+    B, R = table.shape
+    ps = store.shape[2]
+    g = jnp.take(store, table.reshape(-1), axis=1)
+    return g.reshape(store.shape[:1] + (B, R * ps) + store.shape[3:])
+
+
+def _scatter_pages_axis1(store: jax.Array, table: jax.Array,
+                         dense: jax.Array) -> jax.Array:
+    B, R = table.shape
+    ps = store.shape[2]
+    upd = dense.reshape(dense.shape[:1] + (B * R, ps) + dense.shape[3:])
+    return store.at[:, table.reshape(-1)].set(upd)
+
+
+def gather_cache_rows(cache_store, kv_table: jax.Array, paged_flags):
+    """Page-store cache pytree -> the dense per-slot cache the tick body
+    expects.  Non-paged leaves (per-slot calibration/recurrent state) pass
+    through unchanged."""
+    flat, treedef = jax.tree_util.tree_flatten(cache_store)
+    dense = [_gather_pages_axis1(leaf, kv_table) if f else leaf
+             for leaf, f in zip(flat, paged_flags)]
+    return jax.tree_util.tree_unflatten(treedef, dense)
+
+
+def scatter_cache_rows(cache_store, kv_table: jax.Array, new_cache,
+                       paged_flags):
+    """Write a tick's functionally-updated dense cache back into the page
+    stores.  KV pages are private per slot (the warm tick rewrites every
+    position each tick, so sharing would break the moment it was
+    established); only tail/idle entries alias the null page, and those
+    positions are kv_valid-masked — never read by any valid position."""
+    flat_s, treedef = jax.tree_util.tree_flatten(cache_store)
+    flat_n = jax.tree_util.tree_leaves(new_cache)
+    out = [_scatter_pages_axis1(s, kv_table, n) if f else n
+           for s, n, f in zip(flat_s, flat_n, paged_flags)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@functools.lru_cache(maxsize=16)
+def get_paged_tick_fn(model, dcfg: DiffusionConfig, mask_id: int,
+                      page_size: int, s_tot: int, with_cache: bool = True,
+                      mesh=None, jit_steps: bool = True, quant=None):
+    """``batched_tick`` reading/writing through block tables.
+
+    One jitted call: gather canvas/KV pages into dense (B, S) views, run
+    the unchanged tick body (the shard_mapped SPMD tick under ``mesh`` —
+    XLA inserts the reshard at the shard_map boundary), scatter back.
+    Returns ``(canvas_pages, cache_store, x, conf_min, masks_left)`` where
+    ``x`` is the post-tick dense canvas view — the one host copy streaming
+    diffs and request release read, exactly like the slot-pool tick's
+    ``x_new``.  Not donated: the engine's warmup calls it on live stores.
+    """
+    if mesh is not None:
+        inner = get_spmd_tick_fn(model, dcfg, mask_id, mesh,
+                                 jit_steps=False, quant=quant)
+    else:
+        inner = functools.partial(batched_tick, model, dcfg=dcfg,
+                                  mask_id=mask_id, quant=quant)
+    flags = (paged_cache_layout(model, page_size, s_tot)[1]
+             if with_cache else None)
+
+    def tick(params, canvas_pages, cache_store, canvas_table, kv_table,
+             kv_valid, block_start, k, srng):
+        x = gather_canvas_rows(canvas_pages, canvas_table)
+        cache = (None if cache_store is None
+                 else gather_cache_rows(cache_store, kv_table, flags))
+        x_new, new_cache, conf_min, masks_left = inner(
+            params, x, kv_valid, block_start, k, srng, cache)
+        canvas_pages = scatter_canvas_rows(canvas_pages, canvas_table, x_new)
+        if cache_store is not None:
+            cache_store = scatter_cache_rows(cache_store, kv_table,
+                                             new_cache, flags)
+        return canvas_pages, cache_store, x_new, conf_min, masks_left
+
+    return jax.jit(tick) if jit_steps else tick
+
+
+@functools.lru_cache(maxsize=16)
+def get_paged_megatick_fn(model, dcfg: DiffusionConfig, mask_id: int,
+                          k_max: int, page_size: int, s_tot: int,
+                          with_cache: bool = True, mesh=None,
+                          jit_steps: bool = True, quant=None,
+                          slowfast_threshold: Optional[float] = None):
+    """Paged ``get_megatick_fn``: gather once before the fused K-tick
+    while_loop, scatter once after — the block tables are constant across
+    a megastep (admission/release only happens at megastep boundaries).
+    Donates the page stores, mirroring the slot-pool megatick's donation
+    of canvas and cache; the engine rebinds both from the outputs."""
+    inner = get_megatick_fn(model, dcfg, mask_id, k_max, mesh=mesh,
+                            jit_steps=False, quant=quant,
+                            slowfast_threshold=slowfast_threshold)
+    flags = (paged_cache_layout(model, page_size, s_tot)[1]
+             if with_cache else None)
+
+    def megatick(params, canvas_pages, cache_store, canvas_table, kv_table,
+                 kv_valid, state, rng, k_req, stop_on_release):
+        x = gather_canvas_rows(canvas_pages, canvas_table)
+        cache = (None if cache_store is None
+                 else gather_cache_rows(cache_store, kv_table, flags))
+        x, cache, rng, st, bufs, n = inner(params, x, kv_valid, state, rng,
+                                           k_req, stop_on_release, cache)
+        canvas_pages = scatter_canvas_rows(canvas_pages, canvas_table, x)
+        if cache_store is not None:
+            cache_store = scatter_cache_rows(cache_store, kv_table, cache,
+                                             flags)
+        return canvas_pages, cache_store, x, rng, st, bufs, n
+
+    if not jit_steps:
+        return megatick
+    return jax.jit(megatick,
+                   donate_argnums=(1, 2) if with_cache else (1,))
+
+
 @functools.lru_cache(maxsize=32)
 def get_tick_stage_fns(model, dcfg: DiffusionConfig, mask_id: int,
                        jit_steps: bool = True, quant=None):

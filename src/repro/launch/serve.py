@@ -31,7 +31,7 @@ from repro.core import baos as baos_lib
 from repro.core import diffusion
 from repro.core import sampling as sampling_lib
 from repro.models.registry import build_model
-from repro.serving import Request, ServingEngine, get_policy
+from repro.serving import EngineConfig, Request, ServingEngine, get_policy
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -69,6 +69,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="vary request prompt/gen lengths across the trace")
     ap.add_argument("--breakdown", action="store_true",
                     help="time forward vs sampling stages per tick (Fig. 1)")
+    ap.add_argument("--pool", default="slot", choices=["slot", "paged"],
+                    help="cache backend: contiguous per-slot rows, or the "
+                         "paged block pool with radix-tree prefix sharing "
+                         "(docs/paged_cache.md)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per page for --pool paged")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical page budget for --pool paged (default: "
+                         "enough for every slot plus the null page)")
     ap.add_argument("--megatick", type=int, default=1, metavar="K",
                     help="fuse up to K engine ticks into one on-device "
                          "while_loop megastep (docs/megatick.md): one "
@@ -176,7 +185,7 @@ def make_requests(args, cfg, seed: int) -> list:
     rs = np.random.RandomState(seed)
     n = args.requests * args.batch
     reqs = []
-    for uid in range(1, n + 1):           # engine uids must be positive
+    for _ in range(n):                    # submit() auto-assigns uids
         if args.mixed:
             p_len = int(rs.randint(max(4, args.prompt_len // 2),
                                    args.prompt_len + 1))
@@ -185,7 +194,7 @@ def make_requests(args, cfg, seed: int) -> list:
         else:
             p_len, g_len = args.prompt_len, args.gen_len
         prompt = rs.randint(0, cfg.vocab - 2, size=(p_len,)).astype(np.int32)
-        reqs.append(Request(uid=uid, prompt=prompt, gen_length=g_len))
+        reqs.append(Request(prompt=prompt, gen_length=g_len))
     return reqs
 
 
@@ -234,11 +243,12 @@ def run_engine(args, cfg, model, params, dcfg, mesh=None) -> None:
     fwd_kw = _fwd_kw(cfg, model, params, num_slots)
     obs = make_obs(args, cfg, dcfg, num_slots, max_seq)
 
-    eng = ServingEngine(model, params, dcfg, num_slots=num_slots,
-                        max_seq_len=max_seq, mode=args.mode, policy=policy,
-                        rng=jax.random.PRNGKey(args.seed),
-                        breakdown=args.breakdown, fwd_kw=fwd_kw, mesh=mesh,
-                        obs=obs, megatick_k=args.megatick)
+    eng = ServingEngine(model, params, dcfg, EngineConfig(
+        num_slots=num_slots, max_seq_len=max_seq, mode=args.mode,
+        policy=policy, rng=jax.random.PRNGKey(args.seed),
+        breakdown=args.breakdown, fwd_kw=fwd_kw, mesh=mesh, obs=obs,
+        megatick_k=args.megatick, pool=args.pool, page_size=args.page_size,
+        num_pages=args.num_pages))
     eng.warmup()    # compile off-clock: the timed ticks charge no jit time
     completed = eng.run(reqs)
     for c in completed[: min(8, len(completed))]:
@@ -278,7 +288,8 @@ def run_http(args, cfg, model, params, dcfg, mesh=None) -> None:
         policy=policy, mesh=mesh, host=args.host, port=args.http,
         seed=args.seed, obs=obs, breakdown=args.breakdown,
         drift=args.drift, profile_ticks=args.profile_ticks,
-        profile_dir=args.profile_dir, megatick_k=args.megatick)
+        profile_dir=args.profile_dir, megatick_k=args.megatick,
+        pool=args.pool, page_size=args.page_size, num_pages=args.num_pages)
     try:
         asyncio.run(serve_forever(frontend))
     except KeyboardInterrupt:

@@ -26,6 +26,12 @@ Metric catalog (names/labels/units in docs/observability.md):
   dllm_queue_depth{replica}                 gauge
   dllm_drift_ratio{replica,stage}           gauge, calibrated measured/modeled
   dllm_drift_scale{replica}                 gauge, hardware calibration factor
+  dllm_pool_pages{replica,state}            gauge, paged-pool occupancy
+                                            (in_use|free_canvas|free_kv|cached)
+  dllm_prefix_pages_total{replica,result}   prompt-page radix lookups (hit|miss)
+  dllm_page_evictions_total{replica}        LRU-reclaimed cached pages
+  dllm_preemptions_total{replica,event}     spill|restore page preemptions
+  dllm_requests_by_policy_total{replica,policy}  admissions by step policy
   dllm_http_requests_total{route,code}      HTTP frontend answers
   dllm_router_submits_total{replica}        requests routed to each replica
   dllm_router_overloaded_total{}            submissions every replica refused
@@ -118,13 +124,35 @@ class ServingObs:
                 "dllm_drift_scale",
                 "measured/modeled hardware calibration factor",
                 ("replica",))
+            self._pool_pages = r.gauge(
+                "dllm_pool_pages",
+                "Paged-pool page occupancy by state",
+                ("replica", "state"))
+            self._prefix_pages = r.counter(
+                "dllm_prefix_pages_total",
+                "Prompt-page radix-cache lookups by result",
+                ("replica", "result"))
+            self._page_evictions = r.counter(
+                "dllm_page_evictions_total",
+                "Radix-cached canvas pages reclaimed by LRU eviction",
+                ("replica",))
+            self._preempt_events = r.counter(
+                "dllm_preemptions_total",
+                "Requests spilled to host (spill) / re-admitted into "
+                "fresh pages (restore)", ("replica", "event"))
+            self._req_by_policy = r.counter(
+                "dllm_requests_by_policy_total",
+                "Admitted requests by effective step policy",
+                ("replica", "policy"))
         else:
             for attr in ("_requests", "_tokens", "_blocks", "_ticks",
                          "_kv_uploads", "_early_exits", "_host_elided",
                          "_megasteps", "_megastep_ticks", "_tick_s",
                          "_stage_s", "_queue_wait", "_ttft", "_latency",
                          "_active", "_queue_depth", "_drift",
-                         "_drift_scale"):
+                         "_drift_scale", "_pool_pages", "_prefix_pages",
+                         "_page_evictions", "_preempt_events",
+                         "_req_by_policy"):
                 setattr(self, attr, getattr(_root, attr))
         # pre-bound label handles for the tick hot path: label validation
         # and key construction happen once here, not per tick
@@ -141,6 +169,18 @@ class ServingObs:
         self._b_active = self._active.labels(replica=rep)
         self._b_queue = self._queue_depth.labels(replica=rep)
         self._b_scale = self._drift_scale.labels(replica=rep)
+        self._b_pages = {state: self._pool_pages.labels(replica=rep,
+                                                        state=state)
+                         for state in ("in_use", "free_canvas", "free_kv",
+                                       "cached")}
+        self._b_prefix_hit = self._prefix_pages.labels(replica=rep,
+                                                       result="hit")
+        self._b_prefix_miss = self._prefix_pages.labels(replica=rep,
+                                                        result="miss")
+        self._b_evictions = self._page_evictions.labels(replica=rep)
+        # last-seen pool counter values: the pool keeps lifetime totals,
+        # the registry counters advance by the per-tick delta
+        self._pool_seen = {"hits": 0, "misses": 0, "evictions": 0}
         self._stage_handles: Dict[str, object] = {}
         self._drift_handles: Dict[str, object] = {}
         self._tick_count = 0
@@ -303,6 +343,44 @@ class ServingObs:
     def policy_early_exit(self, n: int = 1) -> None:
         if n > 0:
             self._early_exits.inc(n, replica=self.replica)
+
+    # -- paged pool (engine hooks, docs/paged_cache.md) ---------------------
+
+    def request_policy(self, name: str) -> None:
+        """Admission under an effective step policy (engine-global or
+        per-request override)."""
+        self._req_by_policy.inc(replica=self.replica, policy=name)
+
+    def request_preempted(self, uid: int) -> None:
+        self._preempt_events.inc(replica=self.replica, event="spill")
+        if self.trace.enabled:
+            self.trace.instant_async("preempted", id=uid)
+
+    def request_restored(self, uid: int) -> None:
+        self._preempt_events.inc(replica=self.replica, event="restore")
+        if self.trace.enabled:
+            self.trace.instant_async("restored", id=uid)
+
+    def pool_pages(self, pool) -> None:
+        """Refresh page-occupancy gauges and advance the prefix/eviction
+        counters by the pool's lifetime-total deltas (one call per tick)."""
+        self._b_pages["in_use"].set(pool.pages_in_use)
+        self._b_pages["free_canvas"].set(pool.free_canvas_pages)
+        self._b_pages["free_kv"].set(pool.free_kv_pages)
+        self._b_pages["cached"].set(pool.cached_pages)
+        seen = self._pool_seen
+        d = pool.prefix_hits - seen["hits"]
+        if d > 0:
+            self._b_prefix_hit.inc(d)
+            seen["hits"] = pool.prefix_hits
+        d = pool.prefix_misses - seen["misses"]
+        if d > 0:
+            self._b_prefix_miss.inc(d)
+            seen["misses"] = pool.prefix_misses
+        d = pool.evictions - seen["evictions"]
+        if d > 0:
+            self._b_evictions.inc(d)
+            seen["evictions"] = pool.evictions
 
     def drift_report(self) -> Optional[dict]:
         return None if self.drift is None else self.drift.report()

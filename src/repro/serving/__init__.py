@@ -7,17 +7,17 @@ forward + Stable-Max sampling call per engine tick (core/diffusion
 HTTP/SSE layer on top lives in ``repro.serving.frontend``
 (docs/streaming_serving.md).
 """
-from repro.serving.cache_pool import CachePool
-from repro.serving.engine import (CommitEvent, CompletedRequest, Request,
-                                  ServingEngine)
+from repro.serving.cache_pool import CachePool, PagedCachePool, SpilledSlot
+from repro.serving.engine import (CommitEvent, CompletedRequest,
+                                  EngineConfig, Request, ServingEngine)
 from repro.serving.metrics import MetricsTracker
 from repro.serving.scheduler import (FIFOPolicy, Policy,
                                      ShortestGenFirstPolicy, SlowFastPolicy,
                                      expired_requests, get_policy)
 
 __all__ = [
-    "CachePool", "CommitEvent", "CompletedRequest", "Request",
-    "ServingEngine", "MetricsTracker", "Policy", "FIFOPolicy",
-    "ShortestGenFirstPolicy", "SlowFastPolicy", "expired_requests",
-    "get_policy",
+    "CachePool", "PagedCachePool", "SpilledSlot", "CommitEvent",
+    "CompletedRequest", "EngineConfig", "Request", "ServingEngine",
+    "MetricsTracker", "Policy", "FIFOPolicy", "ShortestGenFirstPolicy",
+    "SlowFastPolicy", "expired_requests", "get_policy",
 ]

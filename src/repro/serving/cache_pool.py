@@ -1,15 +1,35 @@
-"""Preallocated KV slot pool for the serving engine.
+"""KV/canvas storage pools for the serving engine.
 
-One pool row (batch index) per serving slot, sized once at engine start for
-(num_slots, max_seq_len) — admission never allocates.  The pool also does
-the slot free-list accounting for cache-free ("none") serving, where no KV
-arrays are held.
+Two pool flavors behind one slot-accounting surface (docs/paged_cache.md):
+
+* :class:`CachePool` — the original slot pool: one fixed (max_seq_len)
+  region per batch slot, sized once at engine start.  Admission never
+  allocates, but short requests strand the unused tail of their slot and
+  identical prompts recompute from scratch.
+* :class:`PagedCachePool` — canvas and KV storage allocated in fixed-size
+  pages addressed through per-slot block tables.  Full prompt pages are
+  content-hashed into a radix tree so requests sharing a prefix map to the
+  same physical canvas pages (copy-on-write at the first divergent page:
+  the divergent chunk is privatized at admission before anything writes
+  it); admission is footprint-aware (projected pages vs free pages, with
+  LRU eviction of unreferenced cached pages), and whole requests can be
+  preempted to host memory and restored into fresh pages.
+
+Page 0 of every store is the reserved *null page*: idle slots and the tail
+of short rows map to it, so every block table is always fully populated.
+The tick's duplicate-index scatter stays value-deterministic because null
+and shared pages only ever receive identical values (see
+core.diffusion.scatter_canvas_rows).
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 
 class CachePool:
@@ -69,3 +89,420 @@ class CachePool:
         return {"num_slots": self.num_slots, "in_use": self.in_use,
                 "acquires": self.acquires, "releases": self.releases,
                 "peak_in_use": self.peak_in_use}
+
+
+# ---------------------------------------------------------------------------
+# Paged pool
+# ---------------------------------------------------------------------------
+
+class _RadixNode:
+    """One page-sized prompt chunk in the prefix cache.
+
+    Children are keyed by the raw bytes of the next chunk's token ids —
+    the content hash is the dict hash of those bytes, so two prompts share
+    a node exactly when their chunk contents are identical.  ``refs``
+    counts live slots whose path runs through this node; a node with
+    ``refs == 0`` keeps its physical page cached until LRU eviction
+    reclaims it (leaf-first: a slot referencing a deep node holds a ref on
+    every ancestor, so an evictable node never has referenced children).
+    """
+
+    __slots__ = ("key", "page", "refs", "children", "parent", "last_used")
+
+    def __init__(self, key: bytes, page: int, parent: "_RadixNode"):
+        self.key = key
+        self.page = page
+        self.refs = 0
+        self.children: Dict[bytes, "_RadixNode"] = {}
+        self.parent = parent
+        self.last_used = 0
+
+
+@dataclasses.dataclass
+class SpilledSlot:
+    """Host-side image of a preempted slot: everything :meth:`restore`
+    needs to rebuild bit-identical device state in fresh pages."""
+    row: np.ndarray                    # (max_seq_len,) canvas
+    prompt_len: int
+    total_len: int
+    kv_pages: Optional[list]           # per paged leaf: (stack, n, ps, ...)
+    slot_leaves: Optional[list]        # per non-paged leaf: slot's batch row
+
+
+class PagedCachePool:
+    """Paged canvas/KV block pool with a radix-tree prefix cache.
+
+    Canvas pages live in one (num_pages, page_size) int32 store; with
+    ``with_cache`` every sequence-dimension cache leaf gets a matching
+    (stack, num_pages, page_size, ...) store, while per-slot leaves (BAOS
+    calibration rows, recurrent state) stay dense at num_slots rows.  Each
+    slot owns two block tables of ``max_seq_len / page_size`` entries:
+    the canvas table may point at shared radix-cached prompt pages, the KV
+    table is always private (the warm tick rewrites every KV page every
+    tick, so KV sharing is copy-on-write with an eager copy — i.e. never
+    shared).  Unused table entries point at the reserved null page 0.
+
+    Admission is footprint-aware: :meth:`can_admit` projects the new pages
+    a request needs *after* prefix matching against free + evictable pages.
+    """
+
+    def __init__(self, model, num_slots: int, max_seq_len: int, *,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 with_cache: bool = True, mask_id: int = 0,
+                 prefix_cache: bool = True):
+        if page_size < 2:
+            raise ValueError(f"page_size must be >= 2, got {page_size}")
+        if max_seq_len % page_size:
+            raise ValueError(
+                f"max_seq_len {max_seq_len} must be a multiple of "
+                f"page_size {page_size}")
+        self.num_slots = num_slots
+        self.max_seq_len = max_seq_len
+        self.page_size = page_size
+        self.pages_per_row = max_seq_len // page_size
+        # slot-equivalent default: every slot can hold a full row (page 0
+        # is reserved) — same capacity as the slot pool, minus stranding
+        self.num_pages = (1 + num_slots * self.pages_per_row
+                          if num_pages is None else int(num_pages))
+        if self.num_pages < 2:
+            raise ValueError(f"num_pages must be >= 2, got {self.num_pages}")
+        self.with_cache = with_cache
+        self.mask_id = int(mask_id)
+        self.prefix_cache = prefix_cache
+
+        self.canvas_pages = jnp.full((self.num_pages, page_size),
+                                     self.mask_id, jnp.int32)
+        self.cache: Optional[Any] = None
+        self._paged_flags: Optional[list] = None
+        self._batch_axes: Optional[list] = None
+        if with_cache:
+            from repro.core import diffusion
+            _, self._paged_flags, self._batch_axes = \
+                diffusion.paged_cache_layout(model, page_size, max_seq_len)
+            # per-slot leaves keep their init *values* (e.g. BAOS scales
+            # start at 1.0), so build them from a seq-minimal real cache;
+            # paged stores are fresh zero pages like init_cache's KV
+            small = model.init_cache(num_slots, page_size)
+            flat, treedef = jax.tree_util.tree_flatten(small)
+            store = [jnp.zeros(leaf.shape[:1] + (self.num_pages, page_size)
+                               + leaf.shape[3:], leaf.dtype) if f else leaf
+                     for leaf, f in zip(flat, self._paged_flags)]
+            self.cache = jax.tree_util.tree_unflatten(treedef, store)
+
+        R = self.pages_per_row
+        self._canvas_np = np.zeros((num_slots, R), np.int32)
+        self._kv_np = np.zeros((num_slots, R), np.int32)
+        self.canvas_table = jnp.asarray(self._canvas_np)
+        self.kv_table = jnp.asarray(self._kv_np)
+        self._tables_dirty = False
+        self._staged: List[Tuple[int, np.ndarray]] = []     # canvas writes
+
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._free_canvas: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self._free_kv: List[int] = (list(range(self.num_pages - 1, 0, -1))
+                                    if with_cache else [])
+        # per-slot page ownership: canvas -> (page, node-or-None) pairs,
+        # kv -> plain page lists
+        self._slot_canvas: Dict[int, List[Tuple[int, Optional[_RadixNode]]]] \
+            = {}
+        self._slot_kv: Dict[int, List[int]] = {}
+        self._slot_len: Dict[int, int] = {}
+
+        self._root = _RadixNode(b"", 0, None)
+        self._nodes: List[_RadixNode] = []
+        self._clock = 0
+
+        self.acquires = 0
+        self.releases = 0
+        self.peak_in_use = 0
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.evictions = 0
+        self.preemptions = 0
+        self.restores = 0
+        self.peak_pages_in_use = 0
+
+    # -- slot accounting (CachePool-compatible surface) ---------------------
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_slots - len(self._free)
+
+    def acquire(self) -> int:
+        if not self._free:
+            raise RuntimeError("cache pool exhausted")
+        slot = self._free.pop()
+        self.acquires += 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return slot
+
+    def update(self, new_cache) -> None:
+        self.cache = new_cache
+
+    # -- page accounting ----------------------------------------------------
+
+    def pages_needed(self, total_len: int) -> int:
+        """Pages per store a ``total_len`` request occupies (worst case,
+        no prefix sharing).  Static geometry — the frontend's admission
+        snapshot uses this without touching the (engine-thread-owned)
+        radix tree."""
+        return -(-int(total_len) // self.page_size)
+
+    @property
+    def free_canvas_pages(self) -> int:
+        return len(self._free_canvas)
+
+    @property
+    def free_kv_pages(self) -> int:
+        return len(self._free_kv)
+
+    @property
+    def cached_pages(self) -> int:
+        """Radix-cached canvas pages with no live referent (evictable)."""
+        return sum(1 for n in self._nodes if n.refs == 0)
+
+    @property
+    def pages_in_use(self) -> int:
+        canvas = self.num_pages - 1 - len(self._free_canvas)
+        kv = (self.num_pages - 1 - len(self._free_kv)) if self.with_cache \
+            else 0
+        return canvas + kv
+
+    def _match_prefix(self, row: np.ndarray, prompt_len: int,
+                      mutate: bool) -> Tuple[int, List[_RadixNode]]:
+        """Walk the radix tree over full prompt pages.  Returns the number
+        of matched pages and (with ``mutate``) bumps their LRU stamps."""
+        if not self.prefix_cache:
+            return 0, []
+        ps = self.page_size
+        node, path = self._root, []
+        for p in range(prompt_len // ps):
+            child = node.children.get(row[p * ps:(p + 1) * ps].tobytes())
+            if child is None:
+                break
+            path.append(child)
+            node = child
+        if mutate:
+            self._clock += 1
+            for n in path:
+                n.last_used = self._clock
+        return len(path), path
+
+    def projected_pages(self, prompt: np.ndarray,
+                        total_len: int) -> Tuple[int, int]:
+        """(new canvas pages, new KV pages) admitting this request would
+        allocate, after prefix matching.  Read-only."""
+        row = np.asarray(prompt, np.int32).reshape(-1)
+        n = self.pages_needed(total_len)
+        hits, _ = self._match_prefix(row, row.shape[0], mutate=False)
+        return n - hits, (n if self.with_cache else 0)
+
+    def can_admit(self, prompt: np.ndarray, total_len: int) -> bool:
+        """Footprint-aware admission check: projected peak pages against
+        free + evictable pages in both stores (plus a free slot)."""
+        if not self._free:
+            return False
+        c_new, k_new = self.projected_pages(prompt, total_len)
+        if c_new > len(self._free_canvas) + self.cached_pages:
+            return False
+        return (not self.with_cache) or k_new <= len(self._free_kv)
+
+    # -- allocation ---------------------------------------------------------
+
+    def _evict_one(self) -> bool:
+        victim = None
+        for n in self._nodes:
+            if n.refs == 0 and not n.children:
+                if victim is None or n.last_used < victim.last_used:
+                    victim = n
+        if victim is None:
+            return False
+        del victim.parent.children[victim.key]
+        self._nodes.remove(victim)
+        self._free_canvas.append(victim.page)
+        self.evictions += 1
+        return True
+
+    def _alloc_canvas(self) -> int:
+        if not self._free_canvas and not self._evict_one():
+            raise RuntimeError("paged pool: out of canvas pages")
+        return self._free_canvas.pop()
+
+    def bind_row(self, slot: int, row: np.ndarray, prompt_len: int,
+                 total_len: int) -> None:
+        """Map ``slot`` onto physical pages for a freshly admitted request.
+
+        Full prompt pages go through the radix tree (hit -> shared page,
+        no upload; miss -> new page, staged upload, inserted so later
+        requests share it).  The first page containing generation
+        positions *is* the copy-on-write point: it is privatized here,
+        seeded with the row's own content, before any tick writes to it.
+        Unused tail entries stay on the null page.
+        """
+        row = np.ascontiguousarray(np.asarray(row, np.int32))
+        ps = self.page_size
+        n = self.pages_needed(total_len)
+        n_full_prompt = min(prompt_len // ps, n)
+        hits, path = self._match_prefix(row, n_full_prompt * ps, mutate=True)
+        self.prefix_hits += hits
+        # ref the matched path *before* allocating the rest — _alloc_canvas
+        # may evict, and an unreferenced node on our own path would be fair
+        # game for the evictor
+        for nd in path:
+            nd.refs += 1
+        owned: List[Tuple[int, Optional[_RadixNode]]] = \
+            [(nd.page, nd) for nd in path]
+        node = path[-1] if path else self._root
+        self._clock += 1
+        for p in range(hits, n):
+            page = self._alloc_canvas()
+            chunk = row[p * ps:(p + 1) * ps]
+            self._staged.append((page, chunk.copy()))
+            nd = None
+            if self.prefix_cache and p < n_full_prompt:
+                self.prefix_misses += 1
+                nd = _RadixNode(chunk.tobytes(), page, node)
+                nd.refs = 1
+                nd.last_used = self._clock
+                node.children[nd.key] = nd
+                self._nodes.append(nd)
+                node = nd
+            owned.append((page, nd))
+        table = self._canvas_np[slot]
+        table[:] = 0
+        table[:n] = [p for p, _ in owned]
+        kv_pages: List[int] = []
+        if self.with_cache:
+            if len(self._free_kv) < n:
+                raise RuntimeError("paged pool: out of KV pages")
+            kv_pages = [self._free_kv.pop() for _ in range(n)]
+            kt = self._kv_np[slot]
+            kt[:] = 0
+            kt[:n] = kv_pages
+        self._slot_canvas[slot] = owned
+        self._slot_kv[slot] = kv_pages
+        self._slot_len[slot] = total_len
+        self._tables_dirty = True
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use)
+
+    def _free_slot_pages(self, slot: int) -> None:
+        self._clock += 1
+        for page, nd in self._slot_canvas.pop(slot, ()):
+            if nd is None:
+                self._free_canvas.append(page)
+            else:
+                nd.refs -= 1
+                nd.last_used = self._clock
+        self._free_kv.extend(self._slot_kv.pop(slot, ()))
+        self._slot_len.pop(slot, None)
+        self._canvas_np[slot] = 0
+        self._kv_np[slot] = 0
+        self._tables_dirty = True
+
+    def release(self, slot: int, zero: bool = False) -> None:
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-released")
+        self._free_slot_pages(slot)
+        self._free.append(slot)
+        self.releases += 1
+
+    def flush(self) -> None:
+        """Upload staged canvas page writes and dirty block tables in one
+        batched device put each — N admissions per tick cost one scatter
+        and one table refresh, not N."""
+        if self._staged:
+            idx = jnp.asarray([p for p, _ in self._staged], jnp.int32)
+            vals = jnp.asarray(np.stack([c for _, c in self._staged]))
+            self.canvas_pages = self.canvas_pages.at[idx].set(vals)
+            self._staged = []
+        if self._tables_dirty:
+            self.canvas_table = jnp.asarray(self._canvas_np)
+            self.kv_table = jnp.asarray(self._kv_np)
+            self._tables_dirty = False
+
+    # -- preemption ---------------------------------------------------------
+
+    def spill(self, slot: int) -> SpilledSlot:
+        """Copy a slot's pages to host and free them (the scheduler's
+        preemption path).  The canvas row, every paged cache leaf's pages,
+        and the per-slot dense leaves are captured, so :meth:`restore`
+        rebuilds bit-identical device state."""
+        self.flush()
+        total_len = self._slot_len[slot]
+        n = self.pages_needed(total_len)
+        ctable = self._canvas_np[slot, :n]
+        row = np.asarray(self.canvas_pages)[ctable].reshape(-1)
+        row = np.concatenate(
+            [row, np.full((self.max_seq_len - row.shape[0],), self.mask_id,
+                          np.int32)])
+        prompt_len = total_len            # recomputed by caller if needed
+        kv_pages = slot_leaves = None
+        if self.with_cache:
+            ktable = self._kv_np[slot, :n]
+            flat = jax.tree_util.tree_leaves(self.cache)
+            kv_pages, slot_leaves = [], []
+            for leaf, f, ax in zip(flat, self._paged_flags,
+                                   self._batch_axes):
+                if f:
+                    kv_pages.append(np.asarray(leaf[:, ktable]))
+                else:
+                    idx = (slice(None),) * ax + (slot,)
+                    slot_leaves.append(np.asarray(leaf[idx]))
+        self._free_slot_pages(slot)
+        self._free.append(slot)
+        self.preemptions += 1
+        return SpilledSlot(row=row, prompt_len=prompt_len,
+                           total_len=total_len, kv_pages=kv_pages,
+                           slot_leaves=slot_leaves)
+
+    def can_restore(self, sp: SpilledSlot) -> bool:
+        return self.can_admit(sp.row[:sp.prompt_len], sp.total_len)
+
+    def restore(self, slot: int, sp: SpilledSlot) -> None:
+        """Upload a spilled slot into fresh pages (prefix pages may re-hit
+        the radix cache, so restore can be cheaper than the original
+        admission)."""
+        self.bind_row(slot, sp.row, sp.prompt_len, sp.total_len)
+        if self.with_cache:
+            n = self.pages_needed(sp.total_len)
+            ktable = jnp.asarray(self._kv_np[slot, :n])
+            flat, treedef = jax.tree_util.tree_flatten(self.cache)
+            kv_it = iter(sp.kv_pages)
+            dense_it = iter(sp.slot_leaves)
+            out = []
+            for leaf, f, ax in zip(flat, self._paged_flags,
+                                   self._batch_axes):
+                if f:
+                    out.append(leaf.at[:, ktable].set(
+                        jnp.asarray(next(kv_it))))
+                else:
+                    idx = (slice(None),) * ax + (slot,)
+                    out.append(leaf.at[idx].set(jnp.asarray(next(dense_it))))
+            self.cache = jax.tree_util.tree_unflatten(treedef, out)
+        self.restores += 1
+
+    # -- reporting ----------------------------------------------------------
+
+    def stats(self) -> dict:
+        lookups = self.prefix_hits + self.prefix_misses
+        return {
+            "num_slots": self.num_slots, "in_use": self.in_use,
+            "acquires": self.acquires, "releases": self.releases,
+            "peak_in_use": self.peak_in_use,
+            "page_size": self.page_size, "num_pages": self.num_pages,
+            "pages_in_use": self.pages_in_use,
+            "peak_pages_in_use": self.peak_pages_in_use,
+            "free_canvas_pages": len(self._free_canvas),
+            "free_kv_pages": len(self._free_kv),
+            "cached_pages": self.cached_pages,
+            "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
+            "prefix_hit_rate": self.prefix_hits / lookups if lookups else 0.0,
+            "evictions": self.evictions,
+            "preemptions": self.preemptions, "restores": self.restores,
+        }

@@ -44,25 +44,41 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import diffusion, schedule as schedule_lib
-from repro.serving.cache_pool import CachePool
+from repro.serving.cache_pool import CachePool, PagedCachePool, SpilledSlot
 from repro.serving.metrics import MetricsTracker
-from repro.serving.scheduler import FIFOPolicy, Policy, SlowFastPolicy
+from repro.serving.scheduler import (FIFOPolicy, Policy, SlowFastPolicy,
+                                     get_policy)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
-    """One single-sequence generation request."""
-    uid: int
+    """One single-sequence generation request.
+
+    Identity equality (``eq=False``): requests hold ndarray prompts, so a
+    generated value ``__eq__`` is ambiguous, and queue membership/removal
+    is about *this* request, not value-equal twins.
+
+    ``uid`` may be left None — :meth:`ServingEngine.submit` assigns the
+    next free uid and returns it (explicit positive uids are still
+    accepted, with the duplicate/non-positive validation).  ``policy``
+    optionally names a per-request step policy (scheduler.get_policy,
+    e.g. ``"slowfast"`` with ``policy_params={"threshold": 0.95}``),
+    overriding the engine-global policy's ``step_k`` for this request.
+    """
     prompt: np.ndarray            # (P,) int32
     gen_length: int
+    uid: Optional[int] = None
     arrival_time: float = 0.0
+    policy: Optional[str] = None
+    policy_params: Optional[dict] = None
 
     @property
     def prompt_len(self) -> int:
@@ -125,19 +141,66 @@ class _Slot:
     # host mirror of still-masked positions, kept only for requests with a
     # commit callback (the per-tick streaming diff)
     masked: Optional[np.ndarray] = None
+    # resolved per-request step policy (None -> engine-global policy)
+    policy: Optional[Policy] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Typed engine construction config (docs/serving.md).
+
+    Collapses the historical ``ServingEngine(**12 kwargs)`` sprawl; the
+    engine also still accepts those kwargs directly through a deprecation
+    shim that builds an EngineConfig from them.  ``pool`` selects the
+    storage backend: ``"slot"`` (one fixed region per batch slot) or
+    ``"paged"`` (block pool + radix prefix cache, docs/paged_cache.md);
+    ``page_size``/``num_pages``/``prefix_cache`` only apply to paged.
+    """
+    num_slots: int = 4
+    max_seq_len: int = 128
+    mode: str = "warm"
+    policy: Optional[Policy] = None
+    rng: Optional[jax.Array] = None
+    jit_steps: bool = True
+    breakdown: bool = False
+    fwd_kw: Optional[dict] = None
+    mesh: Any = None
+    obs: Any = None
+    megatick_k: int = 1
+    pool: str = "slot"
+    page_size: int = 16
+    num_pages: Optional[int] = None
+    prefix_cache: bool = True
 
 
 class ServingEngine:
     """Continuous-batching engine: submit() requests, tick() until drained."""
 
-    def __init__(self, model, params, dcfg: diffusion.DiffusionConfig, *,
-                 num_slots: int = 4, max_seq_len: int = 128,
-                 mode: str = "warm", policy: Optional[Policy] = None,
-                 rng: Optional[jax.Array] = None, jit_steps: bool = True,
-                 breakdown: bool = False, fwd_kw: Optional[dict] = None,
-                 mesh=None, obs=None, megatick_k: int = 1):
+    def __init__(self, model, params, dcfg: diffusion.DiffusionConfig,
+                 config: Optional[EngineConfig] = None, **kwargs):
+        if config is not None and kwargs:
+            raise TypeError(
+                "pass either an EngineConfig or individual kwargs, not both "
+                f"(got config= and {sorted(kwargs)})")
+        if config is None:
+            if kwargs:
+                warnings.warn(
+                    "constructing ServingEngine from individual kwargs is "
+                    "deprecated; pass an EngineConfig",
+                    DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**kwargs)
+        self.config = config
+        num_slots, max_seq_len = config.num_slots, config.max_seq_len
+        mode, policy, rng = config.mode, config.policy, config.rng
+        jit_steps, breakdown = config.jit_steps, config.breakdown
+        fwd_kw, mesh, obs = config.fwd_kw, config.mesh, config.obs
+        megatick_k = config.megatick_k
         if mode not in ("warm", "none"):
             raise ValueError(f"unknown engine mode {mode!r}")
+        if config.pool not in ("slot", "paged"):
+            raise ValueError(f"unknown pool backend {config.pool!r}; "
+                             "choose 'slot' or 'paged'")
+        self.paged = config.pool == "paged"
         self.model = model
         self.params = params
         self.dcfg = dcfg
@@ -158,6 +221,15 @@ class ServingEngine:
         # QuantPolicy is not a jax type: bind it statically into the jitted
         # tick fns rather than passing it as a runtime kwarg
         self._quant = self.fwd_kw.pop("quant", None)
+        if self.paged:
+            if breakdown:
+                raise ValueError(
+                    "the paged pool is incompatible with breakdown timing "
+                    "(the paged tick is one fused gather/tick/scatter "
+                    "executable)")
+            if self.fwd_kw:
+                raise ValueError(
+                    "paged serving does not support extra forward kwargs")
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.mesh = mesh
         if mesh is not None:
@@ -187,14 +259,25 @@ class ServingEngine:
         else:
             self._row_sharding = None
 
-        self.pool = CachePool(model, num_slots, max_seq_len,
-                              with_cache=(mode == "warm"))
-        if mesh is not None and self.pool.cache is not None:
-            self.pool.cache = jax.device_put(
-                self.pool.cache, NamedSharding(mesh, P(None, "data")))
+        if self.paged:
+            self.pool = PagedCachePool(
+                model, num_slots, max_seq_len,
+                page_size=config.page_size, num_pages=config.num_pages,
+                with_cache=(mode == "warm"), mask_id=self.mask_id,
+                prefix_cache=config.prefix_cache)
+        else:
+            self.pool = CachePool(model, num_slots, max_seq_len,
+                                  with_cache=(mode == "warm"))
+            if mesh is not None and self.pool.cache is not None:
+                self.pool.cache = jax.device_put(
+                    self.pool.cache, NamedSharding(mesh, P(None, "data")))
         self.slots: List[Optional[_Slot]] = [None] * num_slots
         self.slot_of_uid: Dict[int, int] = {}
         self.queue: List[Request] = []
+        self._preempted: Dict[int, Tuple[_Slot, SpilledSlot]] = {}
+        self._req_policy: Dict[int, Policy] = {}
+        self._next_uid = 1                  # next auto-assigned request uid
+        self._early_exits_released = 0      # from released per-request policies
         self.completed: List[CompletedRequest] = []
         self.metrics = MetricsTracker(num_slots)
         self.now = 0.0                      # virtual clock (seconds)
@@ -244,12 +327,25 @@ class ServingEngine:
                     f"policy {self.policy.name!r} overrides step_k; only "
                     "the default schedule and SlowFastPolicy run on "
                     "device inside a megatick")
-            self._megatick_fn = diffusion.get_megatick_fn(
-                model, dcfg, self.mask_id, self.megatick_k, mesh=mesh,
-                jit_steps=jit_steps, quant=self._quant,
-                slowfast_threshold=self._sf_threshold)
+            if self.paged:
+                self._megatick_fn = diffusion.get_paged_megatick_fn(
+                    model, dcfg, self.mask_id, self.megatick_k,
+                    config.page_size, max_seq_len,
+                    with_cache=(mode == "warm"), mesh=mesh,
+                    jit_steps=jit_steps, quant=self._quant,
+                    slowfast_threshold=self._sf_threshold)
+            else:
+                self._megatick_fn = diffusion.get_megatick_fn(
+                    model, dcfg, self.mask_id, self.megatick_k, mesh=mesh,
+                    jit_steps=jit_steps, quant=self._quant,
+                    slowfast_threshold=self._sf_threshold)
 
-        if mesh is not None:
+        if self.paged:
+            self._tick_fn = diffusion.get_paged_tick_fn(
+                model, dcfg, self.mask_id, config.page_size, max_seq_len,
+                with_cache=(mode == "warm"), mesh=mesh, jit_steps=jit_steps,
+                quant=self._quant)
+        elif mesh is not None:
             self._tick_fn = diffusion.get_spmd_tick_fn(
                 model, dcfg, self.mask_id, mesh, jit_steps=jit_steps,
                 quant=self._quant)
@@ -271,18 +367,37 @@ class ServingEngine:
 
     def submit(self, request: Request,
                on_commit: Optional[Callable[[CommitEvent], None]] = None
-               ) -> None:
-        """Queue a request; ``on_commit`` (if given) receives a CommitEvent
-        after every tick that touches it, including the final done event."""
+               ) -> int:
+        """Queue a request and return its uid; ``on_commit`` (if given)
+        receives a CommitEvent after every tick that touches it, including
+        the final done event.  A request with ``uid=None`` gets the next
+        unused uid assigned (and written back onto the request)."""
         uid = request.uid
-        if not isinstance(uid, (int, np.integer)) or uid <= 0:
+        if uid is None:
+            uid = self._next_uid
+            while uid in self.metrics.seen_uids:
+                uid += 1
+            request.uid = uid
+        elif not isinstance(uid, (int, np.integer)) or uid <= 0:
             raise ValueError(f"request uid must be a positive int, "
                              f"got {uid!r}")
-        if uid in self.metrics.seen_uids:
+        elif uid in self.metrics.seen_uids:
             # a duplicate would silently overwrite the slot_of_uid and
             # metrics entries of the live/finished request with this uid
             # (seen_uids survives metrics compaction: uids never recycle)
             raise ValueError(f"duplicate request uid {uid}")
+        uid = int(uid)
+        self._next_uid = max(self._next_uid, uid + 1)
+        pol: Optional[Policy] = None
+        if request.policy is not None:
+            # resolve (and validate) the per-request step policy now, so a
+            # bad name/params fails at submit time, not mid-tick
+            pol = get_policy(request.policy, **(request.policy_params or {}))
+            if self.megatick_k > 1 and not self._policy_matches(pol):
+                raise ValueError(
+                    f"per-request policy {request.policy!r} must match the "
+                    f"engine policy {self.policy.name!r} under megatick "
+                    "(step_k runs on device inside the fused loop)")
         L = self.dcfg.block_length
         if request.gen_length <= 0 or request.gen_length % L:
             raise ValueError(
@@ -293,12 +408,24 @@ class ServingEngine:
                 f"request length {request.total_len} exceeds engine "
                 f"max_seq_len {self.max_seq_len}")
         self.queue.append(request)
+        if pol is not None:
+            self._req_policy[uid] = pol
         if on_commit is not None:
-            self._commit_cbs[int(uid)] = on_commit
+            self._commit_cbs[uid] = on_commit
         self.metrics.request_arrived(request.uid, request.arrival_time,
                                      request.gen_length)
         if self.obs is not None:
-            self.obs.request_queued(int(uid))
+            self.obs.request_queued(uid)
+        return uid
+
+    def _policy_matches(self, pol: Policy) -> bool:
+        """Whether a per-request policy resolves to the same on-device
+        step behavior as the engine policy (the megatick constraint)."""
+        if type(pol) is not type(self.policy):
+            return False
+        if isinstance(pol, SlowFastPolicy):
+            return pol.threshold == self.policy.threshold
+        return True
 
     def cancel(self, uid: int) -> bool:
         """Remove a still-*queued* request (the frontend's max_queue_wait
@@ -308,6 +435,7 @@ class ServingEngine:
             if r.uid == uid:
                 del self.queue[i]
                 self._commit_cbs.pop(uid, None)
+                self._req_policy.pop(uid, None)
                 self.metrics.request_shed(uid, self.now)
                 if self.obs is not None:
                     self.obs.request_shed(uid)
@@ -315,16 +443,31 @@ class ServingEngine:
         return False
 
     def _admit(self) -> None:
+        if self.paged:
+            self._restore_preempted()
         while self.pool.free_slots:
             arrived = [r for r in self.queue if r.arrival_time <= self.now]
             if not arrived:
                 break
             pick = arrived[self.policy.select(arrived, self.now)]
+            if self.paged and not self.pool.can_admit(
+                    np.asarray(pick.prompt, np.int32), pick.total_len):
+                # footprint-blocked: the slot exists but the projected
+                # pages don't fit.  Ask the policy for a victim to spill;
+                # with no preemption hook the request waits in queue
+                victim = self.policy.preempt(self.slots, pick, self.now)
+                if victim is None or self.slots[victim] is None:
+                    break
+                self.preempt(self.slots[victim].request.uid)
+                if not self.pool.can_admit(
+                        np.asarray(pick.prompt, np.int32), pick.total_len):
+                    break
             self.queue.remove(pick)
             slot = self.pool.acquire()
             self.slots[slot] = _Slot(
                 request=pick, admitted_time=self.now,
-                block_masks_left=self.dcfg.block_length)
+                block_masks_left=self.dcfg.block_length,
+                policy=self._req_policy.pop(pick.uid, None))
             if pick.uid in self._commit_cbs:
                 m = np.zeros((pick.total_len,), bool)
                 m[pick.prompt_len:] = True
@@ -332,16 +475,69 @@ class ServingEngine:
             self.slot_of_uid[pick.uid] = slot
             row = np.full((self.max_seq_len,), self.mask_id, np.int32)
             row[:pick.prompt_len] = np.asarray(pick.prompt, np.int32)
-            # re-pin: the eager scatter's output sharding drifts from the
-            # tick's P('data', None) spec, which would retrigger a jit
-            # compile on the first timed tick after warmup()
-            self.x = self._put_rows(self.x.at[slot].set(jnp.asarray(row)))
+            if self.paged:
+                # prompt pages dedup through the radix cache; uploads are
+                # staged and flushed once per tick (PagedCachePool.flush)
+                self.pool.bind_row(slot, row, pick.prompt_len,
+                                   pick.total_len)
+            else:
+                # re-pin: the eager scatter's output sharding drifts from
+                # the tick's P('data', None) spec, which would retrigger a
+                # jit compile on the first timed tick after warmup()
+                self.x = self._put_rows(
+                    self.x.at[slot].set(jnp.asarray(row)))
             self._valid_np[slot] = np.arange(self.max_seq_len) < pick.total_len
             self._kv_dirty = True      # uploaded once per tick, not per admit
             self.metrics.request_admitted(pick.uid, self.now)
             if self.obs is not None:
                 self.obs.request_admitted(
                     pick.uid, max(0.0, self.now - pick.arrival_time))
+                pol = self.slots[slot].policy or self.policy
+                self.obs.request_policy(pol.name)
+
+    # -- preemption (paged pool only) ---------------------------------------
+
+    def preempt(self, uid: int) -> bool:
+        """Spill an admitted request to host memory and free its slot +
+        pages; it transparently re-admits (bit-identical state) once pages
+        free up.  Returns False for unknown/unadmitted uids."""
+        if not self.paged:
+            raise RuntimeError("preempt() requires the paged pool "
+                               "(EngineConfig(pool='paged'))")
+        slot = self.slot_of_uid.get(uid)
+        if slot is None:
+            return False
+        s = self.slots[slot]
+        sp = self.pool.spill(slot)
+        sp.prompt_len = s.request.prompt_len
+        self._preempted[uid] = (s, sp)
+        self.slots[slot] = None
+        del self.slot_of_uid[uid]
+        self._valid_np[slot] = np.arange(self.max_seq_len) < 1
+        self._kv_dirty = True
+        if self.obs is not None:
+            self.obs.request_preempted(uid)
+        return True
+
+    def _restore_preempted(self) -> None:
+        """Re-admit spilled requests (oldest first) while slots and pages
+        allow — they resume exactly where they left off, so they outrank
+        the queue."""
+        for uid in list(self._preempted):
+            if not self.pool.free_slots:
+                break
+            s, sp = self._preempted[uid]
+            if not self.pool.can_restore(sp):
+                break
+            slot = self.pool.acquire()
+            self.pool.restore(slot, sp)
+            self.slots[slot] = s
+            self.slot_of_uid[uid] = slot
+            self._valid_np[slot] = np.arange(self.max_seq_len) < sp.total_len
+            self._kv_dirty = True
+            del self._preempted[uid]
+            if self.obs is not None:
+                self.obs.request_restored(uid)
 
     def _release(self, slot: int, x_host: np.ndarray) -> None:
         s = self.slots[slot]
@@ -352,6 +548,10 @@ class ServingEngine:
             arrival_time=req.arrival_time, admitted_time=s.admitted_time,
             completed_time=self.now, ticks=s.ticks))
         self.metrics.request_completed(req.uid, self.now, s.ticks)
+        if s.policy is not None:
+            # fold the dying per-request policy's early-exit count into the
+            # released accumulator so the obs total stays monotone
+            self._early_exits_released += getattr(s.policy, "early_exits", 0)
         if self.obs is not None:
             self.obs.request_done(
                 req.uid, max(0.0, self.now - req.arrival_time), s.ticks)
@@ -369,7 +569,17 @@ class ServingEngine:
 
     @property
     def pending(self) -> int:
-        return len(self.queue) + self.active_slots
+        return len(self.queue) + self.active_slots + len(self._preempted)
+
+    def _early_exits_total(self) -> int:
+        """Early exits across the engine policy, live per-request
+        policies, and already-released per-request policies."""
+        tot = getattr(self.policy, "early_exits", 0)
+        tot += self._early_exits_released
+        for s in self.slots:
+            if s is not None and s.policy is not None:
+                tot += getattr(s.policy, "early_exits", 0)
+        return tot
 
     def _next_arrival(self) -> Optional[float]:
         return min((r.arrival_time for r in self.queue), default=None)
@@ -408,7 +618,15 @@ class ServingEngine:
         # that executable too, or the first timed tick pays its compile
         srng = jax.random.split(jax.random.PRNGKey(0))[1]
         cache = self.pool.cache if self.mode == "warm" else None
-        if self.breakdown:
+        if self.paged:
+            # the paged K=1 tick is not donated, so warming it on the live
+            # page stores is safe (outputs discarded; a k=0 tick scatters
+            # back exactly what it gathered)
+            self.pool.flush()
+            out = self._tick_fn(self.params, self.pool.canvas_pages, cache,
+                                self.pool.canvas_table, self.pool.kv_table,
+                                self.kv_valid, bs, k, srng)
+        elif self.breakdown:
             feats, _ = self._fwd_fn(self.params, self.x, self.kv_valid, bs,
                                     cache, **self.fwd_kw)
             out = self._smp_fn(self.params, feats, self.x, bs, k, srng)
@@ -420,13 +638,25 @@ class ServingEngine:
             zeros = np.zeros((B,), np.int32)
             state = diffusion.megatick_state(
                 zeros, zeros, self.dcfg, active=np.zeros((B,), bool))
-            x_copy = jnp.copy(self.x)            # donated + discarded
-            cache_copy = (None if cache is None
-                          else jax.tree.map(jnp.copy, cache))
-            out = self._megatick_fn(self.params, x_copy, self.kv_valid,
-                                    state, jax.random.PRNGKey(0),
-                                    jnp.int32(1), jnp.asarray(False),
-                                    cache_copy)
+            if self.paged:
+                # the paged megatick donates its page stores: run the
+                # warmup compile on throwaway copies
+                canvas_copy = jnp.copy(self.pool.canvas_pages)
+                cache_copy = (None if cache is None
+                              else jax.tree.map(jnp.copy, cache))
+                out = self._megatick_fn(
+                    self.params, canvas_copy, cache_copy,
+                    self.pool.canvas_table, self.pool.kv_table,
+                    self.kv_valid, state, jax.random.PRNGKey(0),
+                    jnp.int32(1), jnp.asarray(False))
+            else:
+                x_copy = jnp.copy(self.x)        # donated + discarded
+                cache_copy = (None if cache is None
+                              else jax.tree.map(jnp.copy, cache))
+                out = self._megatick_fn(self.params, x_copy, self.kv_valid,
+                                        state, jax.random.PRNGKey(0),
+                                        jnp.int32(1), jnp.asarray(False),
+                                        cache_copy)
             jax.block_until_ready(out)
         return self
 
@@ -452,6 +682,8 @@ class ServingEngine:
             self.now = max(self.now, nxt)     # fast-forward through idle gap
             self._admit()
         self._flush_kv_valid()
+        if self.paged:
+            self.pool.flush()    # staged canvas uploads + dirty tables
 
         T = self.dcfg.steps_per_block
         L = self.dcfg.block_length
@@ -463,7 +695,8 @@ class ServingEngine:
             bs_np[i] = s.request.prompt_len + s.block_idx * L
             t = s.step_in_block
             default_k = int(self._ksched[t]) if t < T else s.block_masks_left
-            k_np[i] = min(self.policy.step_k(s, default_k), L)
+            pol = s.policy or self.policy
+            k_np[i] = min(pol.step_k(s, default_k), L)
 
         # per-stage tick timing (docs/observability.md): host_prep is the
         # pure-python admission + k-schedule bookkeeping; everything that
@@ -483,7 +716,18 @@ class ServingEngine:
         k_vec = jnp.asarray(k_np)
         self.rng, srng = jax.random.split(self.rng)
         cache = self.pool.cache if self.mode == "warm" else None
-        if self.breakdown:
+        if self.paged:
+            # one fused gather -> tick -> scatter call; x_new is the dense
+            # post-tick canvas view (the same array the slot tick returns),
+            # so streaming diffs and release reads are unchanged
+            canvas, new_cache, x_new, conf_min, masks_left = self._tick_fn(
+                self.params, self.pool.canvas_pages, cache,
+                self.pool.canvas_table, self.pool.kv_table, self.kv_valid,
+                bs_vec, k_vec, srng)
+            self.pool.canvas_pages = canvas
+            t2 = time.perf_counter()
+            stages["dispatch"] = t2 - t0
+        elif self.breakdown:
             feats, new_cache = self._fwd_fn(
                 self.params, self.x, self.kv_valid, bs_vec, cache,
                 **self.fwd_kw)
@@ -597,10 +841,12 @@ class ServingEngine:
                 self.metrics.record_stage(name, s_sec)
         if obs is not None:
             obs.tokens_committed(committed_total)
-            ee = getattr(self.policy, "early_exits", 0)
+            ee = self._early_exits_total()
             if ee > self._early_exits_seen:
                 obs.policy_early_exit(ee - self._early_exits_seen)
                 self._early_exits_seen = ee
+            if self.paged:
+                obs.pool_pages(self.pool)
             obs.tick(stages, dt, self.active_slots, len(self.queue),
                      t_start_us=t_enter * 1e6)
         return True
@@ -643,6 +889,8 @@ class ServingEngine:
             self.now = max(self.now, nxt)     # fast-forward through idle gap
             self._admit()
         self._flush_kv_valid()
+        if self.paged:
+            self.pool.flush()    # tables are constant across the megastep
         k_req, stop_on_release = self._choose_megatick_k(max_ticks)
 
         L = self.dcfg.block_length
@@ -675,9 +923,19 @@ class ServingEngine:
         state = diffusion.megatick_state(
             pl, gb, self.dcfg, block_idx=bi, step_in_block=ti,
             block_masks_left=bml, last_conf=lc, active=act)
-        x_new, new_cache, rng_new, _, bufs, n_dev = self._megatick_fn(
-            self.params, self.x, self.kv_valid, state, self.rng,
-            jnp.int32(k_req), jnp.asarray(bool(stop_on_release)), cache)
+        if self.paged:
+            # page stores are donated into the fused loop; rebind both
+            canvas, new_cache, x_new, rng_new, _, bufs, n_dev = \
+                self._megatick_fn(
+                    self.params, self.pool.canvas_pages, cache,
+                    self.pool.canvas_table, self.pool.kv_table,
+                    self.kv_valid, state, self.rng, jnp.int32(k_req),
+                    jnp.asarray(bool(stop_on_release)))
+            self.pool.canvas_pages = canvas
+        else:
+            x_new, new_cache, rng_new, _, bufs, n_dev = self._megatick_fn(
+                self.params, self.x, self.kv_valid, state, self.rng,
+                jnp.int32(k_req), jnp.asarray(bool(stop_on_release)), cache)
         t2 = time.perf_counter()
         stages["dispatch"] = t2 - t0
         n = int(n_dev)                        # THE device sync point
@@ -777,10 +1035,12 @@ class ServingEngine:
             self.metrics.record_stage(name, s_sec)
         if obs is not None:
             obs.tokens_committed(committed_total)
-            ee = getattr(self.policy, "early_exits", 0)
+            ee = self._early_exits_total()
             if ee > self._early_exits_seen:
                 obs.policy_early_exit(ee - self._early_exits_seen)
                 self._early_exits_seen = ee
+            if self.paged:
+                obs.pool_pages(self.pool)
             # per-megastep stages with per-tick attribution: every
             # replayed tick carries 1/n of the megastep's stage seconds,
             # so the dispatch/device_sync histograms directly show the

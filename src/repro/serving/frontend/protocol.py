@@ -81,6 +81,30 @@ def parse_completion(body: dict, *, block_length: int, max_seq_len: int,
     return ids, max_tokens, stream
 
 
+def parse_policy(body: dict) -> Tuple[Optional[str], Optional[dict]]:
+    """Validate the optional per-request ``policy`` + ``policy_params``
+    fields of a completion body -> (name, params).  Raises
+    :class:`BadRequest` for unknown names or parameters the policy's
+    constructor rejects (validated here so clients get a 400, not a
+    worker-thread rejection)."""
+    name = body.get("policy")
+    params = body.get("policy_params")
+    if name is None:
+        if params is not None:
+            raise BadRequest("policy_params requires a policy name")
+        return None, None
+    if not isinstance(name, str):
+        raise BadRequest(f"policy must be a string, got {name!r}")
+    if params is not None and not isinstance(params, dict):
+        raise BadRequest(f"policy_params must be an object, got {params!r}")
+    from repro.serving.scheduler import get_policy
+    try:
+        get_policy(name, **(params or {}))
+    except (TypeError, ValueError) as e:
+        raise BadRequest(f"invalid policy {name!r}: {e}")
+    return name, params
+
+
 # -- response payloads ------------------------------------------------------
 
 def commit_payload(ev) -> dict:

@@ -103,6 +103,32 @@ class EngineWorker:
         self.active = 0
         self.completed = 0
         self.shed_count = 0
+        # paged engines also key admission off page occupancy: worst-case
+        # (no prefix sharing) page need of waiting work vs the free +
+        # evictable page snapshot, with a max_queue-shaped allowance —
+        # pages_needed is static geometry, so the async thread never
+        # touches the engine-owned radix tree
+        self.paged = bool(getattr(engine, "paged", False))
+        self.free_pages: Optional[int] = None
+        self.queued_pages = 0
+        if self.paged:
+            pool = engine.pool
+            self.page_capacity = pool.num_pages - 1
+            self._row_pages = pool.pages_needed(engine.max_seq_len)
+            self.free_pages = self._free_pages_snapshot()
+
+    def _pages_of(self, request: Request) -> int:
+        return self.engine.pool.pages_needed(request.total_len)
+
+    def _free_pages_snapshot(self) -> int:
+        """Effective free pages: the tighter of the canvas (free + LRU-
+        evictable) and KV stores.  Worker-thread only — cached_pages walks
+        the radix node list."""
+        pool = self.engine.pool
+        free = pool.free_canvas_pages + pool.cached_pages
+        if pool.with_cache:
+            free = min(free, pool.free_kv_pages)
+        return free
 
     # -- thread-safe surface (called from the event loop) -------------------
 
@@ -129,6 +155,20 @@ class EngineWorker:
                     f"{self.name} queue full "
                     f"({self.queued} >= {self.max_queue} + "
                     f"{self.free_slots} free slots)")
+            if self.paged:
+                need = self._pages_of(request)
+                if need > self.page_capacity:
+                    raise Overloaded(
+                        f"{self.name}: request needs {need} pages per "
+                        f"store, pool capacity is {self.page_capacity}")
+                budget = self.free_pages + self.max_queue * self._row_pages
+                if self.queued_pages + need > budget:
+                    raise Overloaded(
+                        f"{self.name} page budget exhausted "
+                        f"({self.queued_pages} queued + {need} > "
+                        f"{self.free_pages} free + "
+                        f"{self.max_queue * self._row_pages} queueable)")
+                self.queued_pages += need
             request.arrival_time = self.now_rel()
             self._staging.append((request, deliver))
             self.queued += 1
@@ -169,6 +209,10 @@ class EngineWorker:
                # summary() snapshots defensively, so scraping it from the
                # event-loop thread mid-tick is safe (serving/metrics.py)
                "metrics": eng.metrics.summary()}
+        if self.paged:
+            out["free_pages"] = self.free_pages
+            out["queued_pages"] = self.queued_pages
+            out["pool"] = eng.pool.stats()
         if eng.obs is not None and eng.obs.drift is not None:
             out["drift"] = eng.obs.drift_report()
         return out
@@ -293,8 +337,14 @@ class EngineWorker:
                 progressed = False
             with self._lock:
                 self.queued = len(eng.queue) + len(self._staging)
+                if self.paged:
+                    self.queued_pages = (
+                        sum(self._pages_of(r) for r in eng.queue)
+                        + sum(self._pages_of(r) for r, _ in self._staging))
             self.active = eng.active_slots
             self.free_slots = eng.pool.free_slots
+            if self.paged:
+                self.free_pages = self._free_pages_snapshot()
             # results already reached clients through the commit callbacks;
             # nothing reads eng.completed in server mode, so drain it (and
             # periodically fold old metrics records into aggregates) or a

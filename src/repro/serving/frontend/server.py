@@ -28,7 +28,6 @@ or a 429 JSON body.  See docs/streaming_serving.md.
 from __future__ import annotations
 
 import asyncio
-import itertools
 import json
 import time
 from typing import Optional, Set
@@ -72,7 +71,6 @@ class ServeFrontend:
         self.max_seq_len = min(w.engine.max_seq_len for w in router.workers)
         self.vocab = int(eng.model.cfg.vocab)
         self.mask_id = int(eng.mask_id)
-        self._uids = itertools.count(1)
         self._server: Optional[asyncio.base_events.Server] = None
         self._tasks: Set[asyncio.Task] = set()
         self._workers_started = False
@@ -228,14 +226,17 @@ class ServeFrontend:
             ids, gen_len, stream = protocol.parse_completion(
                 payload, block_length=self.block_length,
                 max_seq_len=self.max_seq_len, vocab=self.vocab)
+            policy, policy_params = protocol.parse_policy(payload)
         except protocol.BadRequest as e:
             self._count("/v1/completions", 400)
             writer.write(protocol.json_response(
                 400, protocol.error_payload("bad_request", str(e))))
             return
 
-        uid = next(self._uids)
-        req = Request(uid=uid, prompt=ids, gen_length=gen_len)
+        # uid=None: the engine assigns the next free uid at submit on the
+        # worker thread; responses carry the uid from the commit events
+        req = Request(prompt=ids, gen_length=gen_len,
+                      policy=policy, policy_params=policy_params)
         events: asyncio.Queue = asyncio.Queue()
         loop = asyncio.get_running_loop()
 
@@ -246,7 +247,7 @@ class ServeFrontend:
             # router hop: which replica took the request, and how long the
             # pick + stage took (spans land on the event-loop thread lane)
             with self.obs.trace.span("router.submit", cat="router",
-                                     args={"uid": uid}):
+                                     args={"prompt_len": int(ids.size)}):
                 worker = self.router.submit(req, deliver)
             self._submits.inc(replica=worker.name)
         except Overloaded as e:
@@ -258,13 +259,11 @@ class ServeFrontend:
         t0 = time.perf_counter()
 
         if stream:
-            await self._stream_response(writer, events, uid,
-                                        int(ids.size), t0)
+            await self._stream_response(writer, events, int(ids.size), t0)
         else:
-            await self._gathered_response(writer, events, uid,
-                                          int(ids.size), t0)
+            await self._gathered_response(writer, events, int(ids.size), t0)
 
-    async def _stream_response(self, writer, events, uid: int,
+    async def _stream_response(self, writer, events,
                                prompt_len: int, t0: float) -> None:
         self._count("/v1/completions", 200)
         writer.write(protocol.sse_headers())
@@ -293,14 +292,14 @@ class ServeFrontend:
             if ev.done:
                 writer.write(protocol.sse_event("done",
                              protocol.completion_payload(
-                                 uid, self.model_name, prompt_len,
+                                 ev.uid, self.model_name, prompt_len,
                                  ev.final_tokens, ticks, ttft,
                                  time.perf_counter() - t0)))
                 break
         writer.write(protocol.SSE_DONE)
         await writer.drain()
 
-    async def _gathered_response(self, writer, events, uid: int,
+    async def _gathered_response(self, writer, events,
                                  prompt_len: int, t0: float) -> None:
         ttft: Optional[float] = None
         ticks = 0
@@ -318,8 +317,9 @@ class ServeFrontend:
                 self._count("/v1/completions", 200)
                 writer.write(protocol.json_response(
                     200, protocol.completion_payload(
-                        uid, self.model_name, prompt_len, ev.final_tokens,
-                        ticks, ttft, time.perf_counter() - t0)))
+                        ev.uid, self.model_name, prompt_len,
+                        ev.final_tokens, ticks, ttft,
+                        time.perf_counter() - t0)))
                 return
 
 
@@ -338,7 +338,11 @@ def build_frontend(model, params, dcfg, *, model_name: str,
                    drift: bool = True,
                    profile_ticks: int = 0,
                    profile_dir: Optional[str] = None,
-                   megatick_k: int = 1) -> ServeFrontend:
+                   megatick_k: int = 1,
+                   pool: str = "slot",
+                   page_size: int = 16,
+                   num_pages: Optional[int] = None,
+                   prefix_cache: bool = True) -> ServeFrontend:
     """Wire engines -> workers -> router -> frontend.  One independent
     engine per replica (each with its own slot pool, rng chain, and tick
     thread; params are shared read-only, and the jitted tick executable is
@@ -357,7 +361,7 @@ def build_frontend(model, params, dcfg, *, model_name: str,
     """
     import jax
 
-    from repro.serving.engine import ServingEngine
+    from repro.serving.engine import EngineConfig, ServingEngine
     from repro.serving.frontend.router import EngineWorker
 
     if obs is None:
@@ -379,12 +383,12 @@ def build_frontend(model, params, dcfg, *, model_name: str,
         if modeled is not None:
             rep_obs.set_drift_model(modeled,
                                     host_stages=("dispatch", "device_sync"))
-        eng = ServingEngine(model, params, dcfg, num_slots=num_slots,
-                            max_seq_len=max_seq_len, mode=mode,
-                            policy=policy, mesh=mesh,
-                            rng=jax.random.PRNGKey(seed + i),
-                            breakdown=breakdown, obs=rep_obs,
-                            megatick_k=megatick_k)
+        eng = ServingEngine(model, params, dcfg, EngineConfig(
+            num_slots=num_slots, max_seq_len=max_seq_len, mode=mode,
+            policy=policy, mesh=mesh, rng=jax.random.PRNGKey(seed + i),
+            breakdown=breakdown, obs=rep_obs, megatick_k=megatick_k,
+            pool=pool, page_size=page_size, num_pages=num_pages,
+            prefix_cache=prefix_cache))
         if warmup:
             eng.warmup()              # compile off-clock, before accepting
         workers.append(EngineWorker(eng, name=f"replica-{i}",

@@ -30,6 +30,12 @@ class Policy:
         """Tokens slot should commit next tick (default: transfer schedule)."""
         return default_k
 
+    def preempt(self, slots: Sequence, incoming, now: float):
+        """Slot index to spill so page-blocked ``incoming`` can admit, or
+        None to leave it queued (paged pool only; see docs/paged_cache.md).
+        The default never preempts — admitted work runs to completion."""
+        return None
+
 
 class FIFOPolicy(Policy):
     """Admit strictly in arrival order."""

@@ -1,0 +1,381 @@
+"""Paged block pool + unified request/engine-config API: radix prefix
+hits/dedup, copy-on-write divergence, LRU eviction, footprint-aware
+admission, spill/restore, EngineConfig shim mapping, auto-assigned uids,
+per-request policies, and the frontend page-budget 429 path
+(docs/paged_cache.md)."""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.core import diffusion
+from repro.models.registry import build_model
+from repro.serving import (EngineConfig, PagedCachePool, Request,
+                           ServingEngine, get_policy)
+from repro.serving.frontend import build_frontend, loadgen, protocol
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = base.get_config("llada-8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _dcfg(gen=16, block=8, steps=4):
+    return diffusion.DiffusionConfig(gen_length=gen, block_length=block,
+                                     steps_per_block=steps,
+                                     cache_mode="none")
+
+
+def _prompt(cfg, seed, n):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n,), 0, cfg.vocab - 2), np.int32)
+
+
+def _pool(**kw):
+    """Canvas-only pool (with_cache=False never touches the model)."""
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("max_seq_len", 16)
+    kw.setdefault("page_size", 4)
+    return PagedCachePool(None, with_cache=False, **kw)
+
+
+def _row(seed, n):
+    return np.random.RandomState(seed).randint(
+        0, 250, size=(n,)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pool unit tests: radix sharing, CoW, eviction, admission
+# ---------------------------------------------------------------------------
+
+def test_prefix_hit_dedups_shared_prompt_pages():
+    """Two requests with the same 2-page prompt share physical canvas
+    pages; only the generation (CoW) page is private."""
+    pool = _pool()
+    row = np.concatenate([_row(1, 8), np.zeros(4, np.int32)])
+    a, b = pool.acquire(), pool.acquire()
+    pool.bind_row(a, row, prompt_len=8, total_len=12)
+    assert (pool.prefix_hits, pool.prefix_misses) == (0, 2)
+    pool.bind_row(b, row, prompt_len=8, total_len=12)
+    assert (pool.prefix_hits, pool.prefix_misses) == (2, 2)
+    ta, tb = pool._canvas_np[a], pool._canvas_np[b]
+    assert list(ta[:2]) == list(tb[:2])          # shared prompt pages
+    assert ta[2] != tb[2]                        # private CoW page
+    assert ta[3] == tb[3] == 0                   # unused tail -> null page
+    # 2 shared + 2 private pages, not 3 + 3
+    assert pool.pages_in_use == 4
+    # the gathered dense rows are identical and correct
+    pool.flush()
+    dense = np.asarray(diffusion.gather_canvas_rows(
+        pool.canvas_pages, pool.canvas_table))
+    np.testing.assert_array_equal(dense[a][:8], row[:8])
+    np.testing.assert_array_equal(dense[a], dense[b])
+
+
+def test_cow_divergence_at_partial_prompt_page():
+    """A prompt ending mid-page privatizes that page (it will receive
+    generation writes) while still sharing the full pages before it."""
+    pool = _pool()
+    prompt = _row(2, 10)                         # 2.5 pages of prompt
+    row = np.concatenate([prompt, np.zeros(6, np.int32)])
+    a, b = pool.acquire(), pool.acquire()
+    pool.bind_row(a, row, prompt_len=10, total_len=16)
+    pool.bind_row(b, row, prompt_len=10, total_len=16)
+    ta, tb = pool._canvas_np[a], pool._canvas_np[b]
+    assert list(ta[:2]) == list(tb[:2])
+    assert ta[2] != tb[2] and ta[3] != tb[3]
+    assert pool.prefix_hits == 2                 # only the 2 full pages
+    pool.flush()
+    dense = np.asarray(diffusion.gather_canvas_rows(
+        pool.canvas_pages, pool.canvas_table))
+    np.testing.assert_array_equal(dense[a], dense[b])
+
+
+def test_release_caches_pages_then_lru_eviction_reclaims():
+    """Released prompt pages stay radix-cached (evictable, refs==0) and a
+    later identical prompt re-hits them; allocation pressure evicts the
+    least-recently-used cached page instead of failing."""
+    pool = _pool(num_slots=2, num_pages=5)       # 4 usable pages
+    row1 = np.concatenate([_row(3, 8), np.zeros(4, np.int32)])
+    s = pool.acquire()
+    pool.bind_row(s, row1, prompt_len=8, total_len=12)
+    pool.release(s)
+    assert pool.cached_pages == 2 and pool.free_canvas_pages == 2
+    # identical prompt: pure hit, no new prompt pages
+    s = pool.acquire()
+    pool.bind_row(s, row1, prompt_len=8, total_len=12)
+    assert pool.prefix_hits == 2 and pool.prefix_misses == 2
+    pool.release(s)
+    # a different 3-page request outstrips the 2 free pages and forces
+    # eviction of the LRU cached prompt pages
+    row2 = np.concatenate([_row(4, 8), np.zeros(4, np.int32)])
+    s = pool.acquire()
+    pool.bind_row(s, row2, prompt_len=8, total_len=12)
+    assert pool.evictions >= 1
+    # live pages are never evictable: a second live 3-page bind exceeds
+    # the 4-page budget and must fail loudly
+    s2 = pool.acquire()
+    row3 = np.concatenate([_row(5, 8), np.zeros(4, np.int32)])
+    assert not pool.can_admit(row3[:8], 12)
+    with pytest.raises(RuntimeError, match="out of canvas pages"):
+        pool.bind_row(s2, row3, prompt_len=8, total_len=12)
+
+
+def test_can_admit_projects_prefix_sharing():
+    """Footprint projection accounts for radix hits: a request whose
+    prompt is fully cached fits where a cold one would not."""
+    pool = _pool(num_slots=3, num_pages=5)       # 4 usable pages
+    row = np.concatenate([_row(6, 8), np.zeros(4, np.int32)])
+    s = pool.acquire()
+    pool.bind_row(s, row, prompt_len=8, total_len=12)    # 3 pages live
+    cold = np.concatenate([_row(7, 8), np.zeros(4, np.int32)])
+    assert not pool.can_admit(cold[:8], 12)      # needs 3, 1 free
+    assert pool.can_admit(row[:8], 12)           # needs 1 after sharing
+    assert pool.projected_pages(row[:8], 12) == (1, 0)
+
+
+def test_spill_restore_roundtrip_canvas_only():
+    pool = _pool()
+    row = np.concatenate([_row(8, 8), _row(9, 4)])
+    s = pool.acquire()
+    pool.bind_row(s, row, prompt_len=8, total_len=12)
+    pool.flush()
+    sp = pool.spill(s)
+    sp.prompt_len = 8
+    np.testing.assert_array_equal(sp.row[:12], row)
+    assert pool.in_use == 0
+    s2 = pool.acquire()
+    assert pool.can_restore(sp)
+    pool.restore(s2, sp)
+    pool.flush()
+    dense = np.asarray(diffusion.gather_canvas_rows(
+        pool.canvas_pages, pool.canvas_table))
+    np.testing.assert_array_equal(dense[s2][:12], row)
+    assert pool.stats()["preemptions"] == 1
+    assert pool.stats()["restores"] == 1
+
+
+def test_pool_validation_errors():
+    with pytest.raises(ValueError, match="multiple"):
+        _pool(max_seq_len=18)
+    with pytest.raises(ValueError, match="page_size"):
+        _pool(page_size=1)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        p = _pool(num_slots=1)
+        p.acquire()
+        p.acquire()
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: page-aware admission, preempt/restore parity
+# ---------------------------------------------------------------------------
+
+def test_engine_defers_admission_on_page_exhaustion(setup):
+    """3 requests, 3 free slots, but pages for only 2 rows: the engine
+    must run at most 2 concurrently and still complete all 3."""
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, _dcfg(gen=8), EngineConfig(
+        num_slots=3, max_seq_len=16, mode="none", pool="paged",
+        page_size=8, num_pages=5, rng=jax.random.PRNGKey(0)))
+    reqs = [Request(prompt=_prompt(cfg, 20 + i, 8), gen_length=8)
+            for i in range(3)]
+    done = eng.run(reqs)
+    assert len(done) == 3
+    assert eng.pool.peak_in_use == 2             # page-limited, not slots
+    # every live page was returned; what remains is the radix-cached
+    # (evictable) prompt pages of the released requests
+    assert eng.pool.stats()["pages_in_use"] == eng.pool.cached_pages
+
+
+def test_engine_preempt_restore_bit_parity(setup):
+    """Spilling a live request to host and restoring it into fresh pages
+    must not change a single output token (warm mode: KV pages spill)."""
+    cfg, model, params = setup
+    prompt = _prompt(cfg, 31, 8)
+    reqs = lambda: [Request(prompt=prompt.copy(), gen_length=8)
+                    for _ in range(3)]
+
+    def run(preempt_at=None):
+        eng = ServingEngine(model, params, _dcfg(gen=8), EngineConfig(
+            num_slots=2, max_seq_len=16, mode="warm", pool="paged",
+            page_size=8, rng=jax.random.PRNGKey(3)))
+        for r in reqs():
+            eng.submit(r)
+        ticks = 0
+        while eng.pending:
+            if not eng.tick():
+                break
+            ticks += 1
+            if preempt_at is not None and ticks == preempt_at:
+                live = [s.request.uid for s in eng.slots if s is not None]
+                eng.preempt(live[-1])
+        return eng, {c.uid: np.asarray(c.tokens) for c in eng.completed}
+
+    _, base_out = run()
+    eng, pre_out = run(preempt_at=2)
+    assert eng.pool.stats()["preemptions"] == 1
+    assert eng.pool.stats()["restores"] == 1
+    assert set(base_out) == set(pre_out)
+    for uid in base_out:
+        np.testing.assert_array_equal(base_out[uid], pre_out[uid])
+
+
+def test_engine_preempt_requires_paged_pool(setup):
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, _dcfg(gen=8), EngineConfig(
+        num_slots=1, max_seq_len=16, mode="none"))
+    with pytest.raises(RuntimeError, match="paged"):
+        eng.preempt(1)
+
+
+def test_engine_paged_parity_under_mesh(setup):
+    """Slot vs paged greedy-token parity with the shard_mapped SPMD tick
+    (the paged gather/scatter wraps the same tick body; XLA reshards at
+    the shard_map boundary)."""
+    if jax.device_count() < 2:
+        pytest.skip("needs 2 devices (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=2)")
+    from repro.launch.mesh import make_debug_mesh
+    cfg, model, params = setup
+    mesh = make_debug_mesh(2, 1)
+
+    def run(pool):
+        eng = ServingEngine(model, params, _dcfg(gen=8), EngineConfig(
+            num_slots=2, max_seq_len=16, mode="none", mesh=mesh,
+            pool=pool, page_size=8, rng=jax.random.PRNGKey(2)))
+        done = eng.run([Request(prompt=_prompt(cfg, 60 + i, 8),
+                                gen_length=8) for i in range(3)])
+        return {c.uid: np.asarray(c.tokens) for c in done}
+
+    a, b = run("slot"), run("paged")
+    assert set(a) == set(b)
+    for uid in a:
+        np.testing.assert_array_equal(a[uid], b[uid])
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig + uids + per-request policies
+# ---------------------------------------------------------------------------
+
+def test_engine_config_kwarg_shim_maps_legacy_kwargs(setup):
+    """The deprecation shim pins the legacy kwarg -> EngineConfig field
+    mapping; mixing a config with kwargs is a hard error."""
+    cfg, model, params = setup
+    with pytest.deprecated_call():
+        eng = ServingEngine(model, params, _dcfg(gen=8), num_slots=3,
+                            max_seq_len=24, mode="none", megatick_k=2,
+                            jit_steps=False)
+    c = eng.config
+    assert isinstance(c, EngineConfig)
+    assert (c.num_slots, c.max_seq_len, c.mode, c.megatick_k,
+            c.jit_steps) == (3, 24, "none", 2, False)
+    assert c.pool == "slot" and not eng.paged
+    with pytest.raises(TypeError, match="not both"):
+        ServingEngine(model, params, _dcfg(gen=8),
+                      EngineConfig(num_slots=1, max_seq_len=24), num_slots=2)
+    with pytest.raises(ValueError, match="unknown pool"):
+        ServingEngine(model, params, _dcfg(gen=8),
+                      EngineConfig(max_seq_len=24, pool="bogus"))
+
+
+def test_submit_assigns_and_returns_uids(setup):
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, _dcfg(gen=8), EngineConfig(
+        num_slots=1, max_seq_len=24, mode="none"))
+    p = _prompt(cfg, 40, 8)
+    assert eng.submit(Request(prompt=p, gen_length=8)) == 1
+    # explicit uids still work and advance the auto counter past them
+    assert eng.submit(Request(uid=5, prompt=p, gen_length=8)) == 5
+    r = Request(prompt=p, gen_length=8)
+    assert eng.submit(r) == 6
+    assert r.uid == 6                            # written back on the request
+
+
+def test_per_request_policy_overrides_engine_policy(setup):
+    """A slowfast request early-exits its blocks while the engine default
+    (fifo) pays the full linear schedule — on the same engine."""
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, _dcfg(gen=16), EngineConfig(
+        num_slots=1, max_seq_len=32, mode="none",
+        rng=jax.random.PRNGKey(1)))
+    p = _prompt(cfg, 41, 8)
+    eng.submit(Request(prompt=p, gen_length=16, policy="slowfast",
+                       policy_params={"threshold": 0.0}))
+    eng.submit(Request(prompt=p, gen_length=16))
+    done = {c.uid: c for c in eng.run()}
+    # threshold 0.0: every post-first step early-exits -> 2 ticks/block
+    assert done[1].ticks == 4
+    assert done[2].ticks == 8                    # engine fifo: full schedule
+    assert eng._early_exits_total() == 2
+
+
+def test_per_request_policy_must_match_under_megatick(setup):
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, _dcfg(gen=8), EngineConfig(
+        num_slots=1, max_seq_len=16, mode="none", megatick_k=2))
+    p = _prompt(cfg, 42, 8)
+    with pytest.raises(ValueError, match="must match the engine policy"):
+        eng.submit(Request(prompt=p, gen_length=8, policy="slowfast"))
+    # a matching per-request policy is accepted
+    eng2 = ServingEngine(model, params, _dcfg(gen=8), EngineConfig(
+        num_slots=1, max_seq_len=16, mode="none", megatick_k=2,
+        policy=get_policy("slowfast", threshold=0.9)))
+    eng2.submit(Request(prompt=p, gen_length=8, policy="slowfast",
+                        policy_params={"threshold": 0.9}))
+
+
+def test_parse_policy_validation():
+    assert protocol.parse_policy({}) == (None, None)
+    assert protocol.parse_policy(
+        {"policy": "slowfast", "policy_params": {"threshold": 0.5}}
+    ) == ("slowfast", {"threshold": 0.5})
+    for body in (
+            {"policy_params": {"threshold": 0.5}},    # params without name
+            {"policy": 7},                            # non-string name
+            {"policy": "slowfast", "policy_params": [1]},   # non-dict
+            {"policy": "nope"},                       # unknown name
+            {"policy": "fifo", "policy_params": {"threshold": 0.5}},
+            {"policy": "slowfast", "policy_params": {"bogus": 1}},
+    ):
+        with pytest.raises(protocol.BadRequest):
+            protocol.parse_policy(body)
+
+
+# ---------------------------------------------------------------------------
+# Frontend: page-budget admission -> 429
+# ---------------------------------------------------------------------------
+
+def test_frontend_sheds_on_page_budget(setup):
+    """A paged replica with pages for one row and max_queue=0 accepts a
+    single request and 429s the rest before any engine tick runs."""
+    cfg, model, params = setup
+    dcfg = _dcfg(gen=8)
+    prompt = _prompt(cfg, 50, 8)
+
+    async def go():
+        fe = build_frontend(model, params, dcfg, model_name="llada-8b",
+                            replicas=1, num_slots=2, max_seq_len=16,
+                            mode="none", max_queue=0, pool="paged",
+                            page_size=8, num_pages=3)
+        await fe.start(start_workers=False)
+        try:
+            tasks = [asyncio.ensure_future(
+                loadgen.complete(fe.url, prompt.tolist(), 8))
+                for _ in range(3)]
+            while sum(t.done() for t in tasks) < 2:
+                await asyncio.sleep(0.01)
+            fe.start_workers()
+            rows = await asyncio.gather(*tasks)
+        finally:
+            await fe.shutdown()
+        return rows
+
+    rows = asyncio.run(go())
+    statuses = sorted(r["status"] for r in rows)
+    assert statuses == ["ok"] + ["shed"] * 2
+    assert all(r["http"] == 429 for r in rows if r["status"] == "shed")

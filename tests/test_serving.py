@@ -168,10 +168,15 @@ def test_engine_rejects_duplicate_and_nonpositive_uids(setup):
     with pytest.raises(ValueError, match="duplicate"):
         eng.submit(Request(uid=7, prompt=np.zeros(8, np.int32),
                            gen_length=8))       # uids are never recycled
-    for bad in (0, -3, 1.5, "9", None):
+    for bad in (0, -3, 1.5, "9"):
         with pytest.raises(ValueError, match="positive"):
             eng.submit(Request(uid=bad, prompt=np.zeros(8, np.int32),
                                gen_length=8))
+    # uid=None is the auto-assign path: submit mints a fresh unused uid,
+    # writes it onto the request, and returns it
+    auto = eng.submit(Request(prompt=np.zeros(8, np.int32), gen_length=8))
+    assert isinstance(auto, int) and auto > 0 and auto != 7
+    eng.cancel(auto)
 
 
 def test_engine_cancel_only_queued_requests(setup):
