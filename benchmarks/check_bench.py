@@ -106,7 +106,35 @@ def _check_serve_stream(b: dict) -> List[Check]:
          one["errors"] + two["errors"] == 0),
         ("completed_1r_2r", f"{one['completed']}/{two['completed']}",
          one["completed"] > 0 and two["completed"] > one["completed"]),
-    ] + _serve_stream_metrics_checks(one, two)
+    ] + _serve_stream_metrics_checks(one, two) \
+      + _serve_stream_slo_checks(b.get("slo"))
+
+
+def _serve_stream_slo_checks(slo) -> List[Check]:
+    """Mixed-class SLO window (the ``slo`` section): the client must have
+    exercised multiple tiers, the server's per-class rollup must cover
+    the classes the client completed work in, and the structured event
+    log must replay cleanly through the lifecycle validator."""
+    if slo is None:            # older payload without the slo section
+        return [("slo_section", "absent", False)]
+    by_class, server, ev = slo["by_class"], slo["server"], slo["events"]
+    done_classes = {c for c, r in by_class.items() if r["completed"] > 0}
+    return [
+        ("slo_client_classes", sorted(by_class),
+         len(by_class) >= 2),
+        ("slo_completed", slo["completed"], slo["completed"] > 0),
+        ("slo_server_classes", sorted(server),
+         done_classes <= set(server)),
+        ("slo_server_violations",
+         {c: sum(server[c]["violations"].values()) for c in server},
+         None),
+        ("event_log_valid", ev.get("valid"),
+         ev.get("valid") is True),
+        ("event_log_records", ev.get("records", 0),
+         ev.get("records", 0) > 0),
+        ("event_log_uids", ev.get("uids", 0),
+         ev.get("uids", 0) > 0),
+    ]
 
 
 def _serve_stream_metrics_checks(one: dict, two: dict) -> List[Check]:

@@ -25,8 +25,11 @@ isolation and divides by the median bare tick.  A third entry,
 ``hook_frac_megatick``, times the fused-dispatch sequence — K replayed
 obs.tick attributions plus one obs.megastep span and one batched
 host_syncs_elided per megastep, amortized over K, with tracing on — so
-the gate also covers megatick engines (docs/megatick.md).  check_bench.py
-gates every ``hook_frac_*`` < 2% and keeps the noisy A/B
+the gate also covers megatick engines (docs/megatick.md).
+``hook_frac_events`` (structured-event-log emits, one block_commit per
+slot per tick into a file-backed EventLog) and ``hook_frac_trace_ctx``
+(W3C traceparent parse + format per request) join the same gate.
+check_bench.py gates every ``hook_frac_*`` < 2% and keeps the noisy A/B
 ``overhead_metrics`` as a coarse backstop (< 10%: an accidental device
 sync or host copy in a hook shows up at ms scale, far above noise).
 
@@ -160,6 +163,56 @@ def _hook_cost_megatick_s(obs) -> float:
     return sorted(ts)[len(ts) // 2]
 
 
+def _hook_cost_events_s() -> float:
+    """Median per-tick seconds of the structured-event-log emit path: one
+    ``block_commit`` record per active slot into a real file-backed
+    EventLog (async flusher running, fsync on) — the worst-case per-tick
+    event traffic the engine generates.  emit() itself is a dict build +
+    deque append under a lock; JSON encoding and file I/O happen on the
+    flusher thread, off the tick path."""
+    import os
+    import tempfile
+    import time
+    from repro.obs.events import EventLog
+
+    ts = []
+    with tempfile.TemporaryDirectory() as td:
+        with EventLog(os.path.join(td, "events.jsonl")) as ev:
+            for rep in range(5):
+                t0 = time.perf_counter()
+                for i in range(HOOK_ITERS):
+                    for s in range(SLOTS):
+                        ev.emit("block_commit", uid=s, replica="r0",
+                                trace="0af7651916cd43dd8448eb211c80319c",
+                                cls="standard", t=float(i), tick=i,
+                                block_idx=0, step_in_block=0,
+                                positions=[1, 2, 3, 4],
+                                tokens=[5, 6, 7, 8], masks_left=4)
+                ts.append((time.perf_counter() - t0) / HOOK_ITERS)
+    return sorted(ts)[len(ts) // 2]
+
+
+def _hook_cost_trace_ctx_s() -> float:
+    """Median seconds of the W3C trace-context hooks the HTTP frontend
+    runs per request: parse the inbound ``traceparent`` header (regex)
+    plus format the outbound one (mints a span id via os.urandom).
+    Charged against the per-tick budget even though it is per-*request*
+    — strictly conservative."""
+    import time
+    from repro.serving.frontend import protocol
+
+    hdr = protocol.format_traceparent(protocol.mint_trace_id())
+    ts = []
+    for rep in range(5):
+        t0 = time.perf_counter()
+        for _ in range(HOOK_ITERS):
+            tid = (protocol.parse_traceparent(hdr)
+                   or protocol.mint_trace_id())
+            protocol.format_traceparent(tid)
+        ts.append((time.perf_counter() - t0) / HOOK_ITERS)
+    return sorted(ts)[len(ts) // 2]
+
+
 def run() -> list:
     cfg, model, params, dcfg = _setup()
     configs = {
@@ -186,6 +239,8 @@ def run() -> list:
     # worst case for megatick: tracing on, so each megastep also emits the
     # megastep span and K back-dated tick spans
     hook_s["megatick"] = _hook_cost_megatick_s(configs["trace"]())
+    hook_s["events"] = _hook_cost_events_s()
+    hook_s["trace_ctx"] = _hook_cost_trace_ctx_s()
     hook_frac = {name: s / med["off"] for name, s in hook_s.items()}
 
     from repro.obs.drift import HOST_DRIFT_BAND

@@ -21,7 +21,12 @@ for reference).  Sections:
            plus the monotone-tick-ordering check (no pacing);
   load     the same saturating Poisson window against 1 and 2 replicas:
            goodput tok/s, TTFT/latency p50/p99, shed rate;
-  ratio    2-replica / 1-replica goodput (CI floor: >= 1.5x).
+  ratio    2-replica / 1-replica goodput (CI floor: >= 1.5x);
+  slo      a mixed-class window (interactive/standard/batch drawn per
+           request) against one replica with the structured event log
+           attached: the client's per-class percentiles, the server's
+           per-class SLO rollup, and a lifecycle-validated
+           BENCH_serve_events.jsonl left for the CI logquery smoke step.
 
 The load generator also scrapes ``/metrics`` mid-window and at the end
 (``--scrape-metrics``): the exposition must parse, counters must be
@@ -64,6 +69,11 @@ WINDOW_S = 3.0 if SMOKE else 6.0
 # = 12.5 req/s; 65 req/s saturates both configs (5.2x / 2.6x)
 RATE = 65.0
 MAX_SEQ = PROMPT_LEN + GEN_TOKENS
+# mixed-class SLO window (the ``slo`` section): per-request tiers drawn
+# from this distribution, structured event log left on disk for the CI
+# logquery smoke step
+CLASS_MIX = {"interactive": 0.3, "standard": 0.5, "batch": 0.2}
+EVENT_LOG = "BENCH_serve_events.jsonl"
 
 
 def _setup():
@@ -149,6 +159,59 @@ async def _load(model, params, dcfg, replicas: int,
     return report
 
 
+async def _slo_load(model, params, dcfg) -> dict:
+    """Mixed-class window against one paced replica with the structured
+    event log attached: exercises the per-class SLO accounting end to end
+    (client draws per-request tiers, server tallies per-class violations)
+    and leaves ``EVENT_LOG`` on disk for the CI logquery smoke step.
+    Single replica on purpose — event-log lifecycle validation keys on
+    uid, and independent replicas mint overlapping uids."""
+    from repro.obs import read_events, validate_events
+    from repro.serving.frontend import build_frontend
+
+    if os.path.exists(EVENT_LOG):
+        os.remove(EVENT_LOG)
+    fe = build_frontend(model, params, dcfg, model_name=ARCH,
+                        replicas=1, num_slots=SLOTS,
+                        max_seq_len=MAX_SEQ, mode="none",
+                        strategy="least_loaded", max_queue=MAX_QUEUE,
+                        tick_floor_s=TICK_FLOOR_S, seed=SEED,
+                        event_log=EVENT_LOG)
+    await fe.start()
+    try:
+        proc = await asyncio.create_subprocess_exec(
+            sys.executable, "-m", "repro.serving.frontend.loadgen",
+            "--url", fe.url, "--rate", str(RATE),
+            "--prompt-len", str(PROMPT_LEN),
+            "--max-tokens", str(GEN_TOKENS),
+            "--seed", str(SEED), "--window", str(WINDOW_S),
+            "--class-mix", json.dumps(CLASS_MIX),
+            stdout=asyncio.subprocess.PIPE,
+            stderr=asyncio.subprocess.PIPE)
+        out, err = await proc.communicate()
+        if proc.returncode:
+            raise RuntimeError(f"loadgen failed: {err.decode()[:500]}")
+        report = json.loads(out)
+        report["server"] = \
+            fe.router.workers[0].engine.obs.slo_summary()
+    finally:
+        await fe.shutdown()
+        ev = getattr(fe.obs, "events", None)
+        if ev is not None:
+            ev.close()
+    recs = read_events(EVENT_LOG)
+    try:
+        summary = validate_events(recs)
+        report["events"] = {"valid": True,
+                            "records": summary["records"],
+                            "uids": len(summary["uids"]),
+                            "by_event": summary["by_event"]}
+    except ValueError as e:
+        report["events"] = {"valid": False, "records": len(recs),
+                            "error": str(e)}
+    return report
+
+
 def run() -> list:
     cfg, model, params, dcfg = _setup()
 
@@ -160,9 +223,10 @@ def run() -> list:
         # measures cores, not the serving layer (informational only)
         one_up = await _load(model, params, dcfg, 1, None)
         two_up = await _load(model, params, dcfg, 2, None)
-        return parity, one, two, one_up, two_up
+        slo = await _slo_load(model, params, dcfg)
+        return parity, one, two, one_up, two_up, slo
 
-    parity, one, two, one_up, two_up = asyncio.run(bench())
+    parity, one, two, one_up, two_up, slo = asyncio.run(bench())
     ratio = (two["goodput_tok_s"] / one["goodput_tok_s"]
              if one["goodput_tok_s"] > 0 else 0.0)
     ratio_up = (two_up["goodput_tok_s"] / one_up["goodput_tok_s"]
@@ -187,6 +251,15 @@ def run() -> list:
                 "goodput_ratio_2x": ratio_up,
             },
         },
+        "slo": {
+            "class_mix": CLASS_MIX,
+            "event_log": EVENT_LOG,
+            "by_class": slo.get("by_class", {}),
+            "server": slo.get("server", {}),
+            "events": slo.get("events", {}),
+            "completed": slo.get("completed", 0),
+            "shed": slo.get("shed", 0),
+        },
     }
     with open("BENCH_serve_stream.json", "w") as f:
         json.dump(payload, f, indent=2)
@@ -209,7 +282,17 @@ def run() -> list:
           f"({ratio_up:.2f}x unpaced on {os.cpu_count()} host cores)  "
           f"parity: generate={parity['stream_matches_generate']} "
           f"offline={parity['stream_matches_offline']}")
+    ev = payload["slo"]["events"]
+    print(f"slo: classes {sorted(payload['slo']['by_class'])}  "
+          f"completed {slo.get('completed', 0)}  "
+          f"event log {'valid' if ev.get('valid') else 'INVALID'} "
+          f"({ev.get('records', 0)} records, "
+          f"{ev.get('uids', 0)} uids) -> {EVENT_LOG}")
     rows.append(("serve_stream/goodput_ratio_2x", 0.0, f"{ratio:.2f}x"))
+    rows.append(("serve_stream/slo_classes", 0.0,
+                 f"{len(payload['slo']['by_class'])}classes"))
+    rows.append(("serve_stream/event_log", float(ev.get("records", 0)),
+                 "valid" if ev.get("valid") else "invalid"))
     rows.append(("serve_stream/json", 0.0, "BENCH_serve_stream.json"))
     return rows
 

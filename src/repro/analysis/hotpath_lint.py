@@ -18,6 +18,11 @@ Rules (allowlist keys use ``rule:relpath::qualname``):
   * ``ANL-ASSERT`` — bare ``assert`` in library code: stripped under
     ``python -O`` and raises the wrong exception type for callers.
     Raise ``ValueError`` (the DiffusionConfig.num_blocks precedent).
+  * ``ANL-EMITIO`` — serialization or blocking file I/O inside a
+    registered event-emit path (``registry.EVENT_EMIT_PATHS``): the emit
+    side of the crash-safe structured event log must stay a dict build +
+    deque append; ``json.dumps`` / ``open`` / ``.write`` / ``.flush`` /
+    ``os.fsync`` belong to the flusher thread.
 """
 from __future__ import annotations
 
@@ -36,6 +41,9 @@ _RNG_NON_CONSUMING = {
 _SYNC_METHODS = {"item", "tolist", "block_until_ready"}
 # jax module-level host-sync functions
 _JAX_SYNC_FUNCS = {"device_get", "block_until_ready"}
+# serialization / blocking-I/O calls forbidden inside event-emit paths
+_EMIT_IO_CALLS = {"json.dumps", "json.dump", "os.fsync", "time.sleep"}
+_EMIT_IO_METHODS = {"write", "flush", "fsync"}
 
 
 def _dotted(node: ast.AST) -> Optional[str]:
@@ -145,6 +153,37 @@ def _check_hostsync(fn: ast.AST, idx: _ModuleIndex, where: str
     return out
 
 
+def _check_emit_io(fn: ast.AST, where: str) -> List[Violation]:
+    """The emit side of the structured event log must not serialize or
+    touch the file: those run on the engine tick / request path, and the
+    crash-safe design defers them to the flusher thread."""
+    out = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Name) and f.id == "open":
+            out.append(Violation(
+                "ANL-EMITIO", where,
+                f"line {node.lineno}: open() inside an event-emit path — "
+                f"file I/O belongs to the flusher thread"))
+        elif isinstance(f, ast.Attribute):
+            if f.attr in _EMIT_IO_METHODS:
+                out.append(Violation(
+                    "ANL-EMITIO", where,
+                    f"line {node.lineno}: .{f.attr}() inside an event-emit "
+                    f"path — defer to the flusher thread"))
+                continue
+            dotted = _dotted(f)
+            if dotted in _EMIT_IO_CALLS:
+                out.append(Violation(
+                    "ANL-EMITIO", where,
+                    f"line {node.lineno}: {dotted}() inside an event-emit "
+                    f"path — serialization/blocking I/O belongs to the "
+                    f"flusher thread"))
+    return out
+
+
 def _check_rng_reuse(fn: ast.AST, idx: _ModuleIndex, where: str
                      ) -> List[Violation]:
     """Flag a key variable consumed by two jax.random draws with no
@@ -230,7 +269,10 @@ def lint_source(relpath: str, source: str) -> Tuple[List[Violation], int]:
 
     # hot-path rules ------------------------------------------------------
     fns = _qualname_functions(tree)
+    emit_paths = registry.EVENT_EMIT_PATHS.get(relpath, ())
     for qual, toplevel, fn in fns:
+        if qual in emit_paths:
+            out.extend(_check_emit_io(fn, f"{relpath}::{qual}"))
         if not _is_hot(relpath, toplevel):
             continue
         where = f"{relpath}::{qual}"
@@ -252,5 +294,8 @@ def run(allow: Allowlist, files: Optional[List[str]] = None) -> PassResult:
     kept, suppressed = allow.filter(violations)
     return PassResult("hotpath_lint", kept, suppressed,
                       info={"files": len(files),
-                            "hot_modules": len(registry.HOT_PATHS)},
+                            "hot_modules": len(registry.HOT_PATHS),
+                            "emit_paths": sum(
+                                len(v) for v in
+                                registry.EVENT_EMIT_PATHS.values())},
                       checked=checked)

@@ -83,6 +83,22 @@ def lock_scope_files() -> List[str]:
 
 
 # ---------------------------------------------------------------------------
+# Event-emit paths: host-side functions on the per-tick / per-request path
+# that feed the structured event log (repro.obs.events).  The crash-safety
+# design keeps the emit side to a dict build + deque append under the lock
+# — JSON serialization, file writes, flush, and fsync belong to the
+# flusher thread only.  The hotpath lint's ANL-EMITIO rule enforces that
+# split over the qualnames registered here.
+# ---------------------------------------------------------------------------
+
+EVENT_EMIT_PATHS: Dict[str, Tuple[str, ...]] = {
+    "repro/obs/events.py": ("EventLog.emit",),
+    "repro/obs/serving.py": ("ServingObs.event",),
+    "repro/serving/engine.py": ("ServingEngine._emit_commit",),
+}
+
+
+# ---------------------------------------------------------------------------
 # Pallas kernel SRAM/VMEM footprints.  Per grid step: streamed in/out
 # blocks are double-buffered by the Pallas pipeline (x2); scratch and
 # resident compute intermediates are single instances.  Shapes mirror the

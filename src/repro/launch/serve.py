@@ -119,6 +119,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "/tmp/dllm-profile)")
     ap.add_argument("--no-drift", dest="drift", action="store_false",
                     help="disable the live model-vs-measured drift monitor")
+    ap.add_argument("--event-log", default=None, metavar="PATH",
+                    help="append-only JSONL structured event log: one "
+                         "record per request lifecycle edge (read it with "
+                         "python -m repro.obs.logquery)")
+    ap.add_argument("--slo-classes", default=None, metavar="JSON",
+                    help="SLO tier overrides merged onto the defaults, "
+                         'e.g. \'{"interactive": {"ttft_deadline_s": '
+                         "1.0}}' (docs/observability.md)")
     return ap
 
 
@@ -203,9 +211,13 @@ def make_obs(args, cfg, dcfg, num_slots: int, max_seq: int):
     --trace-out, drift armed when the analytical model covers the arch.
     The drift baseline includes the host dispatch/device_sync stages at
     their K-amortized cost so DriftMonitor models the megatick shape."""
-    from repro.obs import ServingObs, TraceCollector
+    from repro.obs import EventLog, ServingObs, TraceCollector
 
     obs = ServingObs(trace=TraceCollector(enabled=bool(args.trace_out)))
+    if args.slo_classes is not None:
+        obs.set_slo_classes(args.slo_classes)
+    if args.event_log:
+        obs.set_event_log(EventLog(args.event_log))
     if args.drift:
         try:
             from repro.obs.drift import modeled_tick_stages
@@ -226,6 +238,13 @@ def _finish_obs(args, obs) -> None:
         obs.trace.save(args.trace_out)
         print(f"wrote trace ({len(obs.trace.events())} events, "
               f"{obs.trace.dropped} dropped) to {args.trace_out}")
+    ev = getattr(obs, "events", None)
+    if ev is not None:
+        st = ev.stats()
+        ev.close()
+        if st["path"]:
+            print(f"wrote event log ({st['emitted']} records, "
+                  f"{st['dropped']} dropped) to {st['path']}")
     rep = obs.drift_report()
     if rep is not None and rep["ticks"]:
         drift = {k: (round(v, 3) if v is not None else None)
@@ -289,7 +308,8 @@ def run_http(args, cfg, model, params, dcfg, mesh=None) -> None:
         seed=args.seed, obs=obs, breakdown=args.breakdown,
         drift=args.drift, profile_ticks=args.profile_ticks,
         profile_dir=args.profile_dir, megatick_k=args.megatick,
-        pool=args.pool, page_size=args.page_size, num_pages=args.num_pages)
+        pool=args.pool, page_size=args.page_size, num_pages=args.num_pages,
+        event_log=args.event_log, slo_classes=args.slo_classes)
     try:
         asyncio.run(serve_forever(frontend))
     except KeyboardInterrupt:

@@ -40,7 +40,7 @@ HOST_DRIFT_BAND = (0.05, 20.0)
 def modeled_tick_stages(model_cfg, dcfg, *, batch: int, prompt_len: int,
                         hw=None, model_shards: int = 1,
                         data_shards: int = 1, megatick_k: int = 1,
-                        host=None) -> Dict[str, float]:
+                        host=None, paged: bool = False) -> Dict[str, float]:
     """Per-*tick* modeled stage seconds for a serving engine config.
 
     Uses ``sim.analytical.end_to_end`` on the fused (or sharded) head path
@@ -54,9 +54,12 @@ def modeled_tick_stages(model_cfg, dcfg, *, batch: int, prompt_len: int,
     carries the host-domain stages ``dispatch`` and ``device_sync`` at
     their K-amortized per-tick cost (``host_overhead_per_tick``): one
     dispatch + one sync per megastep, divided over ``megatick_k`` ticks.
-    Host stages live on host wall-clock, not the modeled NPU clock — hand
-    them to ``DriftMonitor(..., host_stages=...)`` so they are excluded
-    from the hardware-scale calibration and tracked as raw ratios.
+    ``paged=True`` additionally models the paged pool's per-dispatch
+    flush as a ``paged_io`` host stage (the engine times its
+    ``pool.flush()`` under the same name).  Host stages live on host
+    wall-clock, not the modeled NPU clock — hand them to
+    ``DriftMonitor(..., host_stages=...)`` so they are excluded from the
+    hardware-scale calibration and tracked as raw ratios.
     """
     from repro.sim import analytical
 
@@ -73,7 +76,8 @@ def modeled_tick_stages(model_cfg, dcfg, *, batch: int, prompt_len: int,
            "sampling": res.sampling_s / n_ticks,
            "tick": res.total_s / n_ticks}
     if host is not None:
-        out.update(analytical.host_overhead_per_tick(host, megatick_k))
+        out.update(analytical.host_overhead_per_tick(host, megatick_k,
+                                                     paged=paged))
     return out
 
 

@@ -25,6 +25,7 @@ import bisect
 import math
 import re
 import threading
+import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 LabelKey = Tuple[str, ...]
@@ -114,7 +115,7 @@ class Metric:
         """(series name, rendered labels, value) rows for exposition."""
         raise NotImplementedError
 
-    def expose(self) -> str:
+    def expose(self, openmetrics: bool = False) -> str:
         lines = [f"# HELP {self.name} {self.help}",
                  f"# TYPE {self.name} {self.type_name}"]
         for series, labels, value in self.samples():
@@ -123,17 +124,33 @@ class Metric:
 
 
 class Counter(Metric):
-    """Monotone non-decreasing counter (per label set)."""
+    """Monotone non-decreasing counter (per label set).
+
+    ``inc(..., exemplar={"trace_id": ...})`` attaches an OpenMetrics
+    exemplar to the label set — the metrics<->trace join point
+    (docs/observability.md): the exemplar surfaces only in the
+    OpenMetrics exposition (``expose(openmetrics=True)``), so the
+    default Prometheus 0.0.4 scrape and its parser stay byte-compatible.
+    """
 
     type_name = "counter"
 
-    def inc(self, amount: float = 1.0, **labels) -> None:
+    def __init__(self, name: str, help: str,
+                 labelnames: Sequence[str] = ()):
+        super().__init__(name, help, labelnames)
+        self._exemplars: Dict[LabelKey, Tuple[dict, float, float]] = {}
+
+    def inc(self, amount: float = 1.0,
+            exemplar: Optional[dict] = None, **labels) -> None:
         if amount < 0:
             raise ValueError(f"{self.name}: counters only increase "
                              f"(inc {amount})")
         key = self._key(labels)
         with self._lock:
             self._values[key] = self._values.get(key, 0.0) + amount
+            if exemplar:
+                self._exemplars[key] = (dict(exemplar), amount,
+                                        time.time())
 
     def value(self, **labels) -> float:
         with self._lock:
@@ -143,6 +160,26 @@ class Counter(Metric):
         with self._lock:
             items = sorted(self._values.items())
         return [(self.name, self._render_labels(k), v) for k, v in items]
+
+    def expose(self, openmetrics: bool = False) -> str:
+        if not openmetrics:
+            return super().expose()
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} {self.type_name}"]
+        with self._lock:
+            items = sorted(self._values.items())
+            exemplars = dict(self._exemplars)
+        for key, value in items:
+            line = f"{self.name}{self._render_labels(key)} {_fmt(value)}"
+            ex = exemplars.get(key)
+            if ex is not None:
+                elabels, evalue, ets = ex
+                inner = ",".join(
+                    f'{ln}="{escape_label_value(str(lv))}"'
+                    for ln, lv in sorted(elabels.items()))
+                line += f" # {{{inner}}} {_fmt(evalue)} {ets:.3f}"
+            lines.append(line)
+        return "\n".join(lines)
 
 
 class Gauge(Metric):
@@ -309,14 +346,22 @@ class Registry:
         with self._lock:
             return self._metrics.get(name)
 
-    def expose(self) -> str:
+    def expose(self, openmetrics: bool = False) -> str:
+        """Text exposition.  ``openmetrics=True`` renders the same sample
+        lines plus counter exemplars and the ``# EOF`` terminator — serve
+        it when the scraper sends ``Accept: application/openmetrics-text``
+        (exemplars are illegal in the 0.0.4 text format)."""
         with self._lock:
             metrics = [self._metrics[n] for n in sorted(self._metrics)]
-        body = "\n".join(m.expose() for m in metrics)
+        body = "\n".join(m.expose(openmetrics) for m in metrics)
+        if openmetrics:
+            return body + ("\n# EOF\n" if body else "# EOF\n")
         return body + ("\n" if body else "")
 
 
 CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+OPENMETRICS_CONTENT_TYPE = \
+    "application/openmetrics-text; version=1.0.0; charset=utf-8"
 
 
 def parse_exposition(text: str) -> Dict[str, Dict[str, float]]:

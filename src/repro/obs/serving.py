@@ -43,11 +43,28 @@ total tick-path cost under 2%.
 """
 from __future__ import annotations
 
-from typing import Dict, Mapping, Optional
+from typing import Dict, List, Mapping, Optional, Tuple
 
+from repro.obs import slo as slo_lib
 from repro.obs.drift import DriftMonitor
+from repro.obs.events import EventLog
 from repro.obs.registry import LATENCY_BUCKETS, Registry, exp_buckets
 from repro.obs.tracing import TraceCollector
+
+# bound on the per-class latency/ttft reservoirs behind slo_summary()
+_SLO_RESERVOIR = 1024
+
+
+def _pctl(vals: List[float], q: float) -> float:
+    if not vals:
+        return 0.0
+    vs = sorted(vals)
+    return vs[min(len(vs) - 1, int(q * len(vs)))]
+
+
+def _new_slo_stat() -> dict:
+    return {"completed": 0, "shed": 0, "tokens": 0,
+            "violations": {}, "ttft": [], "latency": []}
 
 
 class ServingObs:
@@ -56,6 +73,8 @@ class ServingObs:
     def __init__(self, registry: Optional[Registry] = None,
                  trace: Optional[TraceCollector] = None,
                  replica: str = "replica-0",
+                 events: Optional[EventLog] = None,
+                 slo_classes: Optional[Dict[str, "slo_lib.SLOClass"]] = None,
                  _root: Optional["ServingObs"] = None):
         self.registry = registry if registry is not None else Registry()
         # disabled-by-default collector: span calls cost one bool check
@@ -64,6 +83,15 @@ class ServingObs:
             else TraceCollector(enabled=False)
         self.replica = replica
         self.drift: Optional[DriftMonitor] = None
+        # structured event log (repro.obs.events): shared with the root so
+        # one JSONL stream totally orders every replica's lifecycle edges;
+        # None keeps the emit path a single attr check
+        self.events = events if events is not None \
+            else (_root.events if _root is not None else None)
+        # SLO tier table (repro.obs.slo), shared with the root
+        self.slo_classes = slo_classes if slo_classes is not None \
+            else (_root.slo_classes if _root is not None
+                  else slo_lib.resolve_classes(None))
         r = self.registry
         if _root is None:
             self._requests = r.counter(
@@ -144,6 +172,26 @@ class ServingObs:
                 "dllm_requests_by_policy_total",
                 "Admitted requests by effective step policy",
                 ("replica", "policy"))
+            self._slo_requests = r.counter(
+                "dllm_slo_requests_total",
+                "Completed/shed requests by SLO class",
+                ("replica", "class", "event"))
+            self._slo_violations = r.counter(
+                "dllm_slo_violations_total",
+                "SLO deadline misses by class and kind "
+                "(ttft|latency|shed)", ("replica", "class", "kind"))
+            self._slo_tokens = r.counter(
+                "dllm_slo_tokens_total",
+                "Committed generation tokens by SLO class (per-class "
+                "goodput numerator)", ("replica", "class"))
+            self._slo_ttft = r.histogram(
+                "dllm_slo_ttft_seconds",
+                "Arrival to first committed tokens, by SLO class",
+                ("replica", "class"), LATENCY_BUCKETS)
+            self._slo_latency = r.histogram(
+                "dllm_slo_latency_seconds",
+                "Arrival to completion, by SLO class",
+                ("replica", "class"), LATENCY_BUCKETS)
         else:
             for attr in ("_requests", "_tokens", "_blocks", "_ticks",
                          "_kv_uploads", "_early_exits", "_host_elided",
@@ -152,7 +200,9 @@ class ServingObs:
                          "_active", "_queue_depth", "_drift",
                          "_drift_scale", "_pool_pages", "_prefix_pages",
                          "_page_evictions", "_preempt_events",
-                         "_req_by_policy"):
+                         "_req_by_policy", "_slo_requests",
+                         "_slo_violations", "_slo_tokens", "_slo_ttft",
+                         "_slo_latency"):
                 setattr(self, attr, getattr(_root, attr))
         # pre-bound label handles for the tick hot path: label validation
         # and key construction happen once here, not per tick
@@ -181,6 +231,10 @@ class ServingObs:
         # last-seen pool counter values: the pool keeps lifetime totals,
         # the registry counters advance by the per-tick delta
         self._pool_seen = {"hits": 0, "misses": 0, "evictions": 0}
+        # per-class SLO state, replica-local: lazily bound label handles
+        # plus a bounded reservoir behind slo_summary() (/v1/stats)
+        self._b_slo: Dict[str, Dict[str, object]] = {}
+        self._slo_stats: Dict[str, dict] = {}
         self._stage_handles: Dict[str, object] = {}
         self._drift_handles: Dict[str, object] = {}
         self._tick_count = 0
@@ -189,9 +243,85 @@ class ServingObs:
         self.drift_refresh_ticks = 16
 
     def for_replica(self, name: str) -> "ServingObs":
-        """Labeled view sharing this root's registry and trace buffer."""
+        """Labeled view sharing this root's registry, trace buffer, event
+        log, and SLO class table."""
         return ServingObs(self.registry, self.trace, replica=name,
                           _root=self)
+
+    def set_event_log(self, events: Optional[EventLog]) -> "ServingObs":
+        """Attach the structured event log (call on the root *before*
+        ``for_replica`` so every view shares the sink)."""
+        self.events = events
+        return self
+
+    def set_slo_classes(self, classes) -> "ServingObs":
+        """Install an SLO tier table (call on the root before
+        ``for_replica``).  Accepts a ready ``{name: SLOClass}`` dict or
+        any ``repro.obs.slo.resolve_classes`` spec (overlay mapping or
+        JSON string)."""
+        if isinstance(classes, dict) and classes and all(
+                isinstance(v, slo_lib.SLOClass) for v in classes.values()):
+            self.slo_classes = dict(classes)
+        else:
+            self.slo_classes = slo_lib.resolve_classes(classes)
+        return self
+
+    # -- structured event log (repro.obs.events) ----------------------------
+
+    def event(self, event: str, uid: Optional[int] = None,
+              trace: str = "", cls: str = "",
+              t: Optional[float] = None, **fields) -> None:
+        """Emit one lifecycle edge to the shared event log (no-op until a
+        log is attached — one attr check on the disabled path)."""
+        ev = self.events
+        if ev is not None:
+            ev.emit(event, uid, replica=self.replica, trace=trace,
+                    cls=cls, t=t, **fields)
+
+    # -- per-class SLO accounting -------------------------------------------
+
+    def _slo_handles(self, cls: str) -> Dict[str, object]:
+        h = self._b_slo.get(cls)
+        if h is None:
+            rep = self.replica
+            kw = {"class": cls}
+            h = self._b_slo[cls] = {
+                "completed": self._slo_requests.labels(
+                    replica=rep, event="completed", **kw),
+                "shed": self._slo_requests.labels(
+                    replica=rep, event="shed", **kw),
+                "tokens": self._slo_tokens.labels(replica=rep, **kw),
+                "ttft": self._slo_ttft.labels(replica=rep, **kw),
+                "latency": self._slo_latency.labels(replica=rep, **kw),
+            }
+        return h
+
+    def slo_summary(self) -> Dict[str, dict]:
+        """Per-class rollup for /v1/stats: counts, violation kinds,
+        percentile TTFT/latency, and the deadlines in force."""
+        out: Dict[str, dict] = {}
+        for cls in sorted(self._slo_stats):
+            st = self._slo_stats[cls]
+            sc = slo_lib.get_class(self.slo_classes, cls)
+
+            def _fin(v):
+                return None if v is None or v != v or v == float("inf") \
+                    else v
+            out[cls] = {
+                "completed": st["completed"], "shed": st["shed"],
+                "tokens": st["tokens"],
+                "violations": dict(st["violations"]),
+                "ttft_p50_s": _pctl(st["ttft"], 0.50),
+                "ttft_p99_s": _pctl(st["ttft"], 0.99),
+                "latency_p50_s": _pctl(st["latency"], 0.50),
+                "latency_p99_s": _pctl(st["latency"], 0.99),
+                "deadlines": {
+                    "ttft_s": _fin(sc.ttft_deadline_s),
+                    "latency_s": _fin(sc.latency_deadline_s),
+                    "queue_s": _fin(sc.queue_deadline_s),
+                },
+            }
+        return out
 
     def set_drift_model(self, modeled: Mapping[str, float],
                         calibrate: bool = True,
@@ -206,11 +336,16 @@ class ServingObs:
 
     # -- request lifecycle (engine hooks) -----------------------------------
 
-    def request_queued(self, uid: int) -> None:
+    def request_queued(self, uid: int, trace: str = "",
+                       cls: str = "") -> None:
         self._requests.inc(replica=self.replica, event="queued")
         if self.trace.enabled:
-            self.trace.begin_async("request", id=uid,
-                                   args={"replica": self.replica})
+            args = {"replica": self.replica}
+            if trace:
+                args["trace"] = trace      # the log<->trace join key
+            if cls:
+                args["class"] = cls
+            self.trace.begin_async("request", id=uid, args=args)
 
     def request_admitted(self, uid: int, queue_wait_s: float) -> None:
         self._requests.inc(replica=self.replica, event="admitted")
@@ -242,19 +377,78 @@ class ServingObs:
         if n > 0:
             self._b_tokens.inc(n)
 
-    def request_done(self, uid: int, latency_s: float, ticks: int) -> None:
-        self._requests.inc(replica=self.replica, event="completed")
+    def request_done(self, uid: int, latency_s: float, ticks: int,
+                     ttft_s: Optional[float] = None, cls: str = "",
+                     trace: str = "", tokens: int = 0
+                     ) -> Tuple[str, ...]:
+        """Completion accounting.  With an SLO class the per-class series
+        advance and the class deadlines classify the request; the missed
+        kinds are returned so the engine can stamp them on the ``done``
+        event record.  ``trace`` also lands as the exemplar on the
+        completed-requests counter (the metrics<->trace join)."""
+        self._requests.inc(replica=self.replica, event="completed",
+                           exemplar=({"trace_id": trace} if trace
+                                     else None))
         self._latency.observe(latency_s, replica=self.replica)
+        kinds: Tuple[str, ...] = ()
+        if cls:
+            sc = slo_lib.get_class(self.slo_classes, cls)
+            h = self._slo_handles(sc.name)
+            h["completed"].inc()
+            h["latency"].observe(latency_s)
+            if ttft_s is not None:
+                h["ttft"].observe(ttft_s)
+            if tokens > 0:
+                h["tokens"].inc(tokens)
+            kinds = sc.violations(ttft_s, latency_s)
+            st = self._slo_stats.setdefault(sc.name, _new_slo_stat())
+            st["completed"] += 1
+            st["tokens"] += tokens
+            for vals, v in ((st["ttft"], ttft_s),
+                            (st["latency"], latency_s)):
+                if v is not None:
+                    vals.append(v)
+                    if len(vals) > _SLO_RESERVOIR:
+                        del vals[:_SLO_RESERVOIR // 2]
+            for k in kinds:
+                self._slo_violations.inc(replica=self.replica, kind=k,
+                                         **{"class": sc.name})
+                st["violations"][k] = st["violations"].get(k, 0) + 1
         if self.trace.enabled:
-            self.trace.end_async("request", id=uid,
-                                 args={"latency_s": round(latency_s, 6),
-                                       "ticks": ticks})
+            args = {"latency_s": round(latency_s, 6), "ticks": ticks}
+            if trace:
+                args["trace"] = trace
+            if cls:
+                args["class"] = cls
+            if kinds:
+                args["violations"] = list(kinds)
+            self.trace.end_async("request", id=uid, args=args)
+        return kinds
 
-    def request_shed(self, uid: int) -> None:
+    def request_shed(self, uid: int, cls: str = "", trace: str = "",
+                     deadline: bool = False) -> None:
+        """Shed accounting; ``deadline=True`` (queue-wait/SLO deadline
+        expiry) additionally counts a ``kind="shed"`` violation for the
+        class."""
         self._requests.inc(replica=self.replica, event="shed")
+        if cls:
+            sc = slo_lib.get_class(self.slo_classes, cls)
+            self._slo_handles(sc.name)["shed"].inc()
+            st = self._slo_stats.setdefault(sc.name, _new_slo_stat())
+            st["shed"] += 1
+            if deadline:
+                self._slo_violations.inc(replica=self.replica,
+                                         kind="shed",
+                                         **{"class": sc.name})
+                st["violations"]["shed"] = \
+                    st["violations"].get("shed", 0) + 1
         if self.trace.enabled:
-            self.trace.end_async("request", id=uid,
-                                 args={"shed": True})
+            args = {"shed": True}
+            if trace:
+                args["trace"] = trace
+            if cls:
+                args["class"] = cls
+            self.trace.end_async("request", id=uid, args=args)
 
     # -- tick (engine hook) -------------------------------------------------
 

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -221,6 +221,11 @@ class PagedCachePool:
         self.preemptions = 0
         self.restores = 0
         self.peak_pages_in_use = 0
+        # optional structured-event hook (repro.obs.events): the engine
+        # wires ServingObs.event here so pool-internal page edges
+        # (prefix_hit / evict / spill / restore) land in the event log,
+        # uid-less — the pool tracks slots and pages, not requests
+        self.event_cb: Optional[Callable[..., None]] = None
 
     # -- slot accounting (CachePool-compatible surface) ---------------------
 
@@ -325,6 +330,8 @@ class PagedCachePool:
         self._nodes.remove(victim)
         self._free_canvas.append(victim.page)
         self.evictions += 1
+        if self.event_cb is not None:
+            self.event_cb("evict", page=victim.page)
         return True
 
     def _alloc_canvas(self) -> int:
@@ -349,6 +356,8 @@ class PagedCachePool:
         n_full_prompt = min(prompt_len // ps, n)
         hits, path = self._match_prefix(row, n_full_prompt * ps, mutate=True)
         self.prefix_hits += hits
+        if hits and self.event_cb is not None:
+            self.event_cb("prefix_hit", slot=slot, pages=hits)
         # ref the matched path *before* allocating the rest — _alloc_canvas
         # may evict, and an unreferenced node on our own path would be fair
         # game for the evictor
@@ -456,6 +465,9 @@ class PagedCachePool:
         self._free_slot_pages(slot)
         self._free.append(slot)
         self.preemptions += 1
+        if self.event_cb is not None:
+            self.event_cb("spill", slot=slot, pages=n,
+                          total_len=total_len)
         return SpilledSlot(row=row, prompt_len=prompt_len,
                            total_len=total_len, kv_pages=kv_pages,
                            slot_leaves=slot_leaves)
@@ -485,6 +497,9 @@ class PagedCachePool:
                     out.append(leaf.at[idx].set(jnp.asarray(next(dense_it))))
             self.cache = jax.tree_util.tree_unflatten(treedef, out)
         self.restores += 1
+        if self.event_cb is not None:
+            self.event_cb("restore", slot=slot,
+                          pages=self.pages_needed(sp.total_len))
 
     # -- reporting ----------------------------------------------------------
 

@@ -79,6 +79,13 @@ class Request:
     arrival_time: float = 0.0
     policy: Optional[str] = None
     policy_params: Optional[dict] = None
+    # SLO tier (repro.obs.slo): deadlines are measured from
+    # ``arrival_time`` — the *first* submit; preempt/restore never
+    # re-stamps it, so a spilled request's deadlines keep ticking
+    slo_class: str = "standard"
+    # W3C trace id (32 hex chars) linking this request across the event
+    # log, Perfetto spans, SSE stream, and /metrics exemplars; "" = none
+    trace_id: str = ""
 
     @property
     def prompt_len(self) -> int:
@@ -138,6 +145,7 @@ class _Slot:
     last_conf: float = float("-inf")
     block_masks_left: int = 0
     first_commit: bool = False
+    first_commit_t: Optional[float] = None   # virtual clock at first commit
     # host mirror of still-masked positions, kept only for requests with a
     # commit callback (the per-tick streaming diff)
     masked: Optional[np.ndarray] = None
@@ -216,6 +224,12 @@ class ServingEngine:
         # keeps the hot path identical and obs!=None adds only host-side
         # bookkeeping (bounded <2% by benchmarks/obs_overhead.py).
         self.obs = obs
+        # structured event-log hook (repro.obs.events): one record per
+        # request lifecycle edge.  ServingObs.event no-ops (one None
+        # check) when no EventLog is wired, so the cached bound method
+        # costs nothing on the hot path without events.
+        self._event = obs.event if obs is not None \
+            and hasattr(obs, "event") else None
         self._early_exits_seen = 0
         self.fwd_kw = dict(fwd_kw or {})
         # QuantPolicy is not a jax type: bind it statically into the jitted
@@ -271,6 +285,11 @@ class ServingEngine:
             if mesh is not None and self.pool.cache is not None:
                 self.pool.cache = jax.device_put(
                     self.pool.cache, NamedSharding(mesh, P(None, "data")))
+        if self.paged and self._event is not None:
+            # pool-internal edges (spill/restore/prefix_hit/evict) flow
+            # through the same event hook, uid-less (the pool tracks
+            # slots and pages, not request identities)
+            self.pool.event_cb = self._event
         self.slots: List[Optional[_Slot]] = [None] * num_slots
         self.slot_of_uid: Dict[int, int] = {}
         self.queue: List[Request] = []
@@ -415,7 +434,13 @@ class ServingEngine:
         self.metrics.request_arrived(request.uid, request.arrival_time,
                                      request.gen_length)
         if self.obs is not None:
-            self.obs.request_queued(uid)
+            self.obs.request_queued(uid, trace=request.trace_id,
+                                    cls=request.slo_class)
+        if self._event is not None:
+            self._event("submit", uid=uid, trace=request.trace_id,
+                        cls=request.slo_class, t=request.arrival_time,
+                        prompt_len=request.prompt_len,
+                        gen_length=request.gen_length)
         return uid
 
     def _policy_matches(self, pol: Policy) -> bool:
@@ -427,10 +452,12 @@ class ServingEngine:
             return pol.threshold == self.policy.threshold
         return True
 
-    def cancel(self, uid: int) -> bool:
+    def cancel(self, uid: int, reason: str = "shed") -> bool:
         """Remove a still-*queued* request (the frontend's max_queue_wait
         shed path).  Returns False when the uid is unknown or already
-        admitted to a slot — admitted work is never interrupted."""
+        admitted to a slot — admitted work is never interrupted.
+        ``reason="deadline"`` marks a queue-deadline expiry: the shed
+        counts as an SLO violation for the request's class."""
         for i, r in enumerate(self.queue):
             if r.uid == uid:
                 del self.queue[i]
@@ -438,7 +465,15 @@ class ServingEngine:
                 self._req_policy.pop(uid, None)
                 self.metrics.request_shed(uid, self.now)
                 if self.obs is not None:
-                    self.obs.request_shed(uid)
+                    self.obs.request_shed(uid, cls=r.slo_class,
+                                          trace=r.trace_id,
+                                          deadline=(reason == "deadline"))
+                if self._event is not None:
+                    self._event(
+                        "shed", uid=uid, trace=r.trace_id,
+                        cls=r.slo_class, t=self.now, reason=reason,
+                        queue_wait_s=round(
+                            max(0.0, self.now - r.arrival_time), 6))
                 return True
         return False
 
@@ -458,6 +493,12 @@ class ServingEngine:
                 victim = self.policy.preempt(self.slots, pick, self.now)
                 if victim is None or self.slots[victim] is None:
                     break
+                if self._event is not None:
+                    self._event("policy_decision", uid=pick.uid,
+                                trace=pick.trace_id, cls=pick.slo_class,
+                                t=self.now, kind="preempt_victim",
+                                victim=int(self.slots[victim].request.uid),
+                                policy=self.policy.name)
                 self.preempt(self.slots[victim].request.uid)
                 if not self.pool.can_admit(
                         np.asarray(pick.prompt, np.int32), pick.total_len):
@@ -489,11 +530,20 @@ class ServingEngine:
             self._valid_np[slot] = np.arange(self.max_seq_len) < pick.total_len
             self._kv_dirty = True      # uploaded once per tick, not per admit
             self.metrics.request_admitted(pick.uid, self.now)
+            pol = self.slots[slot].policy or self.policy
             if self.obs is not None:
                 self.obs.request_admitted(
                     pick.uid, max(0.0, self.now - pick.arrival_time))
-                pol = self.slots[slot].policy or self.policy
                 self.obs.request_policy(pol.name)
+            if self._event is not None:
+                self._event(
+                    "admit", uid=pick.uid, trace=pick.trace_id,
+                    cls=pick.slo_class, t=self.now, slot=slot,
+                    queue_wait_s=round(
+                        max(0.0, self.now - pick.arrival_time), 6))
+                self._event("policy_decision", uid=pick.uid,
+                            trace=pick.trace_id, cls=pick.slo_class,
+                            t=self.now, kind="admit", policy=pol.name)
 
     # -- preemption (paged pool only) ---------------------------------------
 
@@ -517,6 +567,10 @@ class ServingEngine:
         self._kv_dirty = True
         if self.obs is not None:
             self.obs.request_preempted(uid)
+        if self._event is not None:
+            self._event("preempt", uid=uid, trace=s.request.trace_id,
+                        cls=s.request.slo_class, t=self.now, slot=slot,
+                        total_len=sp.total_len)
         return True
 
     def _restore_preempted(self) -> None:
@@ -538,6 +592,11 @@ class ServingEngine:
             del self._preempted[uid]
             if self.obs is not None:
                 self.obs.request_restored(uid)
+            if self._event is not None:
+                self._event("restore", uid=uid,
+                            trace=s.request.trace_id,
+                            cls=s.request.slo_class, t=self.now,
+                            slot=slot, total_len=sp.total_len)
 
     def _release(self, slot: int, x_host: np.ndarray) -> None:
         s = self.slots[slot]
@@ -552,14 +611,55 @@ class ServingEngine:
             # fold the dying per-request policy's early-exit count into the
             # released accumulator so the obs total stays monotone
             self._early_exits_released += getattr(s.policy, "early_exits", 0)
+        latency_s = max(0.0, self.now - req.arrival_time)
+        ttft_s = (None if s.first_commit_t is None
+                  else max(0.0, s.first_commit_t - req.arrival_time))
+        kinds: Tuple[str, ...] = ()
         if self.obs is not None:
-            self.obs.request_done(
-                req.uid, max(0.0, self.now - req.arrival_time), s.ticks)
+            # obs owns the SLO class table; it returns the deadline kinds
+            # this request missed so the done event can carry them
+            kinds = self.obs.request_done(
+                req.uid, latency_s, s.ticks, ttft_s=ttft_s,
+                cls=req.slo_class, trace=req.trace_id,
+                tokens=req.gen_length) or ()
+        if self._event is not None:
+            self._event(
+                "done", uid=req.uid, trace=req.trace_id,
+                cls=req.slo_class, t=self.now,
+                latency_s=round(latency_s, 6),
+                ttft_s=None if ttft_s is None else round(ttft_s, 6),
+                ticks=s.ticks, tokens=req.gen_length,
+                violations=list(kinds))
         self.slots[slot] = None
         del self.slot_of_uid[req.uid]
         self._valid_np[slot] = np.arange(self.max_seq_len) < 1
         self._kv_dirty = True          # uploaded once per tick, not per free
         self.pool.release(slot)
+
+    def _emit_commit(self, req: Request, cb, tick: int, block_idx: int,
+                     step_in_block: int, positions, tokens,
+                     masks_left: int, block_masks_before: int) -> None:
+        """Event-log record for one tick's commit activity on a request.
+
+        Streaming requests (``cb`` set) get one record per tick with the
+        exact ``block_committed`` SSE payload fields — the event log and
+        the SSE stream stay bit-for-bit consistent.  Non-streaming
+        requests get one summary record per completed block (no
+        positions: the mask-mirror diff never ran, by design — keeping
+        the host-sync elision)."""
+        if self._event is None:
+            return
+        if cb is not None:
+            self._event("block_commit", uid=req.uid, trace=req.trace_id,
+                        cls=req.slo_class, t=self.now, tick=tick,
+                        block_idx=block_idx, step_in_block=step_in_block,
+                        positions=positions, tokens=tokens,
+                        masks_left=masks_left)
+        elif masks_left == 0:
+            self._event("block_commit", uid=req.uid, trace=req.trace_id,
+                        cls=req.slo_class, t=self.now, tick=tick,
+                        block_idx=block_idx, step_in_block=step_in_block,
+                        committed=block_masks_before, masks_left=0)
 
     # -- stepping -----------------------------------------------------------
 
@@ -682,8 +782,14 @@ class ServingEngine:
             self.now = max(self.now, nxt)     # fast-forward through idle gap
             self._admit()
         self._flush_kv_valid()
+        paged_io = 0.0
         if self.paged:
-            self.pool.flush()    # staged canvas uploads + dirty tables
+            # staged canvas uploads + dirty tables; timed as its own
+            # stage so the drift monitor can compare measured paged
+            # gather/scatter overhead against the analytical page_io term
+            tp0 = time.perf_counter()
+            self.pool.flush()
+            paged_io = time.perf_counter() - tp0
 
         T = self.dcfg.steps_per_block
         L = self.dcfg.block_length
@@ -711,7 +817,9 @@ class ServingEngine:
         # metrics.
         stages: Dict[str, float] = {}
         t0 = time.perf_counter()
-        stages["host_prep"] = t0 - t_enter
+        stages["host_prep"] = t0 - t_enter - paged_io
+        if self.paged:
+            stages["paged_io"] = paged_io
         bs_vec = jnp.asarray(bs_np)
         k_vec = jnp.asarray(k_np)
         self.rng, srng = jax.random.split(self.rng)
@@ -794,11 +902,17 @@ class ServingEngine:
                 s.masked &= ~newly
             if not s.first_commit and masks_left < L:
                 s.first_commit = True
+                s.first_commit_t = self.now
                 self.metrics.request_first_commit(uid, self.now)
                 if obs is not None:
                     obs.request_first_commit(
                         uid, max(0.0, self.now - s.request.arrival_time))
             block_idx, step_in_block = s.block_idx, s.step_in_block
+            # event-log commit record precedes any done record _release
+            # emits this tick (lifecycle order: block_commit, then done)
+            self._emit_commit(s.request, cb, self.ticks_total, block_idx,
+                              step_in_block, positions, tokens, masks_left,
+                              s.block_masks_left)
             done = False
             final: Optional[np.ndarray] = None
             if masks_left == 0:               # block fully committed
@@ -844,6 +958,9 @@ class ServingEngine:
             ee = self._early_exits_total()
             if ee > self._early_exits_seen:
                 obs.policy_early_exit(ee - self._early_exits_seen)
+                if self._event is not None:
+                    self._event("early_exit", t=self.now,
+                                n=ee - self._early_exits_seen)
                 self._early_exits_seen = ee
             if self.paged:
                 obs.pool_pages(self.pool)
@@ -889,8 +1006,13 @@ class ServingEngine:
             self.now = max(self.now, nxt)     # fast-forward through idle gap
             self._admit()
         self._flush_kv_valid()
+        paged_io = 0.0
         if self.paged:
-            self.pool.flush()    # tables are constant across the megastep
+            # tables are constant across the megastep; timed as its own
+            # stage (per-tick share = paged_io / n, like dispatch)
+            tp0 = time.perf_counter()
+            self.pool.flush()
+            paged_io = time.perf_counter() - tp0
         k_req, stop_on_release = self._choose_megatick_k(max_ticks)
 
         L = self.dcfg.block_length
@@ -916,7 +1038,9 @@ class ServingEngine:
 
         stages: Dict[str, float] = {}
         t0 = time.perf_counter()
-        stages["host_prep"] = t0 - t_enter
+        stages["host_prep"] = t0 - t_enter - paged_io
+        if self.paged:
+            stages["paged_io"] = paged_io
         # dispatch window mirrors the K=1 path: the state host->device
         # puts plus the single fused call.  x and cache are *donated*
         # into the loop (the engine rebinds both from the outputs below)
@@ -988,11 +1112,15 @@ class ServingEngine:
                     s.masked[bs:bs + L] &= ~newly
                 if not s.first_commit and masks_left < L:
                     s.first_commit = True
+                    s.first_commit_t = self.now
                     self.metrics.request_first_commit(uid, self.now)
                     if obs is not None:
                         obs.request_first_commit(
                             uid, max(0.0, self.now - s.request.arrival_time))
                 block_idx, step_in_block = s.block_idx, s.step_in_block
+                self._emit_commit(s.request, cb, self.ticks_total,
+                                  block_idx, step_in_block, positions,
+                                  tokens, masks_left, s.block_masks_left)
                 done = False
                 final: Optional[np.ndarray] = None
                 if masks_left == 0:           # block fully committed
@@ -1038,6 +1166,9 @@ class ServingEngine:
             ee = self._early_exits_total()
             if ee > self._early_exits_seen:
                 obs.policy_early_exit(ee - self._early_exits_seen)
+                if self._event is not None:
+                    self._event("early_exit", t=self.now,
+                                n=ee - self._early_exits_seen)
                 self._early_exits_seen = ee
             if self.paged:
                 obs.pool_pages(self.pool)

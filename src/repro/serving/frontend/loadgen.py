@@ -81,13 +81,20 @@ async def scrape_metrics(url: str) -> dict:
 
 
 async def complete(url: str, prompt_ids: List[int], max_tokens: int,
-                   stream: bool = True, timeout: float = 120.0) -> dict:
+                   stream: bool = True, timeout: float = 120.0,
+                   slo_class: Optional[str] = None,
+                   traceparent: Optional[str] = None) -> dict:
     """One completion request -> a per-request result row.
 
     Row fields: status ("ok" | "shed" | "error"), ttft_s, latency_s,
     completion_tokens, text, token_ids, ticks (event tick numbers, for
     the monotone-ordering assertion), ticks_monotone, positions (all
-    streamed commit positions, in arrival order).
+    streamed commit positions, in arrival order), trace_id (the server's
+    trace context, from the done payload).
+
+    ``slo_class`` rides in the request body (the server validates it
+    against its tier table); ``traceparent`` sends a client-minted W3C
+    trace context header.
 
     ``timeout`` bounds the whole request wall time: TCP accepts raced
     against a server shutdown can die silently in the closed listener's
@@ -95,23 +102,31 @@ async def complete(url: str, prompt_ids: List[int], max_tokens: int,
     """
     try:
         return await asyncio.wait_for(
-            _complete_inner(url, prompt_ids, max_tokens, stream), timeout)
+            _complete_inner(url, prompt_ids, max_tokens, stream,
+                            slo_class, traceparent), timeout)
     except asyncio.TimeoutError:
         return {"status": "error",
                 "error": f"client timeout after {timeout}s"}
 
 
 async def _complete_inner(url: str, prompt_ids: List[int],
-                          max_tokens: int, stream: bool) -> dict:
+                          max_tokens: int, stream: bool,
+                          slo_class: Optional[str] = None,
+                          traceparent: Optional[str] = None) -> dict:
     t_sub = time.perf_counter()
     reader, writer = await _open(url)
-    body = json.dumps({"prompt": [int(t) for t in prompt_ids],
-                       "max_tokens": int(max_tokens),
-                       "stream": bool(stream)}).encode()
+    req: dict = {"prompt": [int(t) for t in prompt_ids],
+                 "max_tokens": int(max_tokens),
+                 "stream": bool(stream)}
+    if slo_class is not None:
+        req["slo_class"] = slo_class
+    body = json.dumps(req).encode()
     host = urllib.parse.urlsplit(url).netloc
+    extra = f"traceparent: {traceparent}\r\n" if traceparent else ""
     writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: {host}\r\n"
                   f"Content-Type: application/json\r\n"
                   f"Content-Length: {len(body)}\r\n"
+                  f"{extra}"
                   f"Connection: close\r\n\r\n").encode() + body)
     await writer.drain()
     try:
@@ -131,6 +146,7 @@ async def _complete_inner(url: str, prompt_ids: List[int],
                         payload["usage"]["completion_tokens"],
                     "text": payload["choices"][0]["text"],
                     "token_ids": payload["choices"][0]["token_ids"],
+                    "trace_id": payload.get("trace_id"),
                     "ticks": [], "ticks_monotone": True, "positions": []}
         return await _consume_sse(reader, t_sub)
     finally:
@@ -166,6 +182,7 @@ async def _consume_sse(reader, t_sub: float) -> dict:
             row["latency_s"] = time.perf_counter() - t_sub
             row["text"] = payload["choices"][0]["text"]
             row["token_ids"] = payload["choices"][0]["token_ids"]
+            row["trace_id"] = payload.get("trace_id")
         elif event_name == "error":
             row["status"] = ("shed" if payload["error"]["type"]
                              == "overloaded" else "error")
@@ -182,13 +199,21 @@ async def run_load(url: str, *, rate: float = 50.0, n_requests: int = 32,
                    seed: int = 0, stream: bool = True,
                    trace: Optional[List[dict]] = None,
                    window_s: Optional[float] = None,
-                   scrape: bool = False) -> dict:
+                   scrape: bool = False,
+                   class_mix: Optional[dict] = None) -> dict:
     """Fire the workload and aggregate client-side percentiles.
 
     Poisson mode draws exponential inter-arrivals at ``rate`` req/s;
     trace mode replays explicit ``{"at", "prompt_len", "max_tokens"}``
-    rows.  Goodput counts only completed requests' generated tokens —
-    shed requests contribute zero.
+    rows (optionally carrying ``"slo_class"``).  Goodput counts only
+    completed requests' generated tokens — shed requests contribute zero.
+
+    ``class_mix`` maps SLO class name -> weight (need not sum to 1);
+    each request draws its ``slo_class`` from that distribution and the
+    report gains a ``by_class`` section with per-class completed/shed
+    counts, goodput tokens, and TTFT/latency percentiles — the mixed-
+    class signal BENCH_serve_stream compares against the server-side
+    ``dllm_slo_violations_total`` accounting.
 
     ``window_s`` switches to a fixed-window open-loop measurement:
     arrivals fill exactly [0, window_s), stragglers are awaited but only
@@ -217,6 +242,15 @@ async def run_load(url: str, *, rate: float = 50.0, n_requests: int = 32,
         gens = [max_tokens] * len(arrivals)
     n = len(arrivals)
     prompts = [rs.randint(0, vocab - 2, size=(p,)).tolist() for p in plens]
+    classes: Optional[List[Optional[str]]] = None
+    if class_mix:
+        names = sorted(class_mix)
+        w = np.asarray([float(class_mix[k]) for k in names], dtype=float)
+        w = w / w.sum()
+        classes = [str(names[j]) for j in rs.choice(len(names), size=n,
+                                                    p=w)]
+    elif trace is not None and any("slo_class" in t for t in trace):
+        classes = [t.get("slo_class") for t in trace]
 
     t0 = time.perf_counter()
 
@@ -224,12 +258,15 @@ async def run_load(url: str, *, rate: float = 50.0, n_requests: int = 32,
         delay = t0 + arrivals[i] - time.perf_counter()
         if delay > 0:
             await asyncio.sleep(delay)
+        cls = classes[i] if classes is not None else None
         try:
-            row = await complete(url, prompts[i], gens[i], stream=stream)
+            row = await complete(url, prompts[i], gens[i], stream=stream,
+                                 slo_class=cls)
         except (ConnectionError, OSError, asyncio.IncompleteReadError,
                 ValueError) as e:      # ValueError: line-limit overrun
             row = {"status": "error", "error": repr(e)}
         row["i"] = i
+        row["slo_class"] = cls
         row["end_s"] = time.perf_counter() - t0
         return row
 
@@ -283,6 +320,26 @@ async def run_load(url: str, *, rate: float = 50.0, n_requests: int = 32,
         "latency_p99_s": _pctl([r["latency_s"] for r in ok], 99),
         "ticks_monotone": all(r.get("ticks_monotone", True) for r in ok),
     }
+    if classes is not None:
+        by_class = {}
+        for name in sorted({c for c in classes if c is not None}):
+            rows_c = [r for r in rows if r.get("slo_class") == name]
+            okc = [r for r in rows_c if r["status"] == "ok"]
+            by_class[name] = {
+                "requests": len(rows_c),
+                "completed": len(okc),
+                "shed": sum(1 for r in rows_c if r["status"] == "shed"),
+                "errors": sum(1 for r in rows_c
+                              if r["status"] == "error"),
+                "good_tokens": sum(r["completion_tokens"] for r in okc),
+                "ttft_p50_s": _pctl([r["ttft_s"] for r in okc
+                                     if r.get("ttft_s") is not None], 50),
+                "ttft_p99_s": _pctl([r["ttft_s"] for r in okc
+                                     if r.get("ttft_s") is not None], 99),
+                "latency_p50_s": _pctl([r["latency_s"] for r in okc], 50),
+                "latency_p99_s": _pctl([r["latency_s"] for r in okc], 99),
+            }
+        out["by_class"] = by_class
     if scrape:
         out["metrics"] = await _metrics_report(url, scrape_mid)
     return out
@@ -342,16 +399,23 @@ def main(argv=None) -> None:
                     help="scrape /metrics mid-run and at the end; the "
                          "report gains a 'metrics' section (parse + "
                          "monotonicity checks)")
+    ap.add_argument("--class-mix", default=None,
+                    help="JSON object of slo_class -> weight, e.g. "
+                         '\'{"interactive": 0.3, "standard": 0.7}\'; '
+                         "each request draws its class and the report "
+                         "gains a per-class 'by_class' section")
     args = ap.parse_args(argv)
     trace = None
     if args.trace:
         with open(args.trace) as f:
             trace = json.load(f)
+    class_mix = json.loads(args.class_mix) if args.class_mix else None
     report = asyncio.run(run_load(
         args.url, rate=args.rate, n_requests=args.requests,
         prompt_len=args.prompt_len, max_tokens=args.max_tokens,
         seed=args.seed, stream=not args.no_stream, trace=trace,
-        window_s=args.window, scrape=args.scrape_metrics))
+        window_s=args.window, scrape=args.scrape_metrics,
+        class_mix=class_mix))
     print(json.dumps(report, indent=2))
 
 

@@ -20,9 +20,13 @@ followed by the literal ``data: [DONE]`` terminator.
 from __future__ import annotations
 
 import json
-from typing import Optional, Tuple
+import os
+import re
+from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+from repro.obs import slo as slo_lib
 
 
 class BadRequest(ValueError):
@@ -105,6 +109,61 @@ def parse_policy(body: dict) -> Tuple[Optional[str], Optional[dict]]:
     return name, params
 
 
+def parse_slo_class(body: dict,
+                    classes: Optional[Dict] = None) -> str:
+    """Validate the optional ``slo_class`` field of a completion body.
+    Unknown class names are a client error (400) — silently downgrading a
+    request's tier would hide misconfigured clients from the violation
+    accounting."""
+    name = body.get("slo_class", slo_lib.DEFAULT_CLASS)
+    if not isinstance(name, str) or not name:
+        raise BadRequest(f"slo_class must be a non-empty string, "
+                         f"got {name!r}")
+    if classes is not None and name not in classes:
+        raise BadRequest(f"unknown slo_class {name!r}; choose from "
+                         f"{sorted(classes)}")
+    return name
+
+
+# -- W3C trace context (docs/observability.md) ------------------------------
+#
+# One trace id per request links the client's log line, the structured
+# event log, the Perfetto async request span, and the /metrics exemplar.
+# The header is the W3C traceparent form: 00-<32hex trace>-<16hex span>-
+# <2hex flags>; the frontend accepts a client-minted one or mints its own.
+
+_TRACEPARENT_RE = re.compile(
+    r"^00-([0-9a-f]{32})-([0-9a-f]{16})-([0-9a-f]{2})$")
+
+
+def mint_trace_id() -> str:
+    return os.urandom(16).hex()
+
+
+def mint_span_id() -> str:
+    return os.urandom(8).hex()
+
+
+def parse_traceparent(header: Optional[str]) -> Optional[str]:
+    """Extract the trace id from a ``traceparent`` header, or None when
+    absent/malformed/all-zero (the spec's invalid values) — the caller
+    then mints a fresh id rather than failing the request."""
+    if not header:
+        return None
+    m = _TRACEPARENT_RE.match(header.strip().lower())
+    if m is None:
+        return None
+    trace_id, span_id = m.group(1), m.group(2)
+    if trace_id == "0" * 32 or span_id == "0" * 16:
+        return None
+    return trace_id
+
+
+def format_traceparent(trace_id: str, span_id: Optional[str] = None,
+                       flags: str = "01") -> str:
+    return f"00-{trace_id}-{span_id or mint_span_id()}-{flags}"
+
+
 # -- response payloads ------------------------------------------------------
 
 def commit_payload(ev) -> dict:
@@ -123,10 +182,13 @@ def commit_payload(ev) -> dict:
 def completion_payload(uid: int, model: str, prompt_len: int,
                        final_tokens: np.ndarray, ticks: int,
                        ttft_s: Optional[float],
-                       latency_s: float) -> dict:
-    """Final (``done`` / non-streaming) OpenAI-style completion object."""
+                       latency_s: float,
+                       trace_id: Optional[str] = None) -> dict:
+    """Final (``done`` / non-streaming) OpenAI-style completion object.
+    ``trace_id`` (when the frontend runs with trace context) lets clients
+    join the response to the event log / Perfetto trace."""
     completion = np.asarray(final_tokens)[prompt_len:]
-    return {
+    out = {
         "id": f"cmpl-{uid}",
         "object": "text_completion",
         "model": model,
@@ -145,6 +207,9 @@ def completion_payload(uid: int, model: str, prompt_len: int,
         "ttft_s": None if ttft_s is None else float(ttft_s),
         "latency_s": float(latency_s),
     }
+    if trace_id is not None:
+        out["trace_id"] = trace_id
+    return out
 
 
 def error_payload(err_type: str, message: str) -> dict:
@@ -166,22 +231,29 @@ _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
 
 
 def http_response(status: int, body: bytes,
-                  content_type: str = "application/json") -> bytes:
+                  content_type: str = "application/json",
+                  headers: Optional[Dict[str, str]] = None) -> bytes:
+    extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
     head = (f"HTTP/1.1 {status} {_REASONS.get(status, 'Unknown')}\r\n"
             f"Content-Type: {content_type}\r\n"
             f"Content-Length: {len(body)}\r\n"
+            f"{extra}"
             f"Connection: close\r\n\r\n")
     return head.encode("utf-8") + body
 
 
-def json_response(status: int, payload: dict) -> bytes:
-    return http_response(status, json.dumps(payload).encode("utf-8"))
+def json_response(status: int, payload: dict,
+                  headers: Optional[Dict[str, str]] = None) -> bytes:
+    return http_response(status, json.dumps(payload).encode("utf-8"),
+                         headers=headers)
 
 
-def sse_headers() -> bytes:
+def sse_headers(headers: Optional[Dict[str, str]] = None) -> bytes:
     """Response head for a streaming reply; events follow unframed (the
     connection closes after ``data: [DONE]``, so no chunked encoding)."""
+    extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
     return (b"HTTP/1.1 200 OK\r\n"
             b"Content-Type: text/event-stream\r\n"
             b"Cache-Control: no-cache\r\n"
-            b"Connection: close\r\n\r\n")
+            + extra.encode("utf-8")
+            + b"Connection: close\r\n\r\n")

@@ -49,9 +49,12 @@ class Overloaded(RuntimeError):
 
 @dataclasses.dataclass
 class ShedEvent:
-    """Terminal event for a request dropped *before* any commit."""
+    """Terminal event for a request dropped *before* any commit.
+    ``slo_class`` reports the shed request's tier so per-class violation
+    accounting (and the 429 body) can name it."""
     uid: int
     reason: str
+    slo_class: str = ""
 
 
 class EngineWorker:
@@ -62,7 +65,8 @@ class EngineWorker:
                  max_queue_wait: Optional[float] = None,
                  tick_floor_s: Optional[float] = None,
                  profile_ticks: int = 0,
-                 profile_dir: Optional[str] = None):
+                 profile_dir: Optional[str] = None,
+                 slo_classes: Optional[dict] = None):
         self.engine = engine
         self.name = name
         # --profile-ticks N: wrap the first N productive ticks of this
@@ -78,6 +82,14 @@ class EngineWorker:
         if self.max_queue < 0:
             raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
         self.max_queue_wait = max_queue_wait
+        # per-class queue deadlines (repro.obs.slo): the shed path uses
+        # the tighter of max_queue_wait and each request's class
+        # queue_deadline_s.  Defaults to the engine obs class table.
+        if slo_classes is None and engine.obs is not None:
+            slo_classes = getattr(engine.obs, "slo_classes", None)
+        self.slo_classes = slo_classes
+        self._class_deadlines = bool(slo_classes) and any(
+            c.queue_deadline_s is not None for c in slo_classes.values())
         # Optional device-paced tick emulation: sleep out the remainder of
         # ``tick_floor_s`` after each tick's host work.  On a real
         # accelerator the tick is device-bound and the host sits idle, so
@@ -215,6 +227,10 @@ class EngineWorker:
             out["pool"] = eng.pool.stats()
         if eng.obs is not None and eng.obs.drift is not None:
             out["drift"] = eng.obs.drift_report()
+        if eng.obs is not None and hasattr(eng.obs, "slo_summary"):
+            out["slo"] = eng.obs.slo_summary()
+            if getattr(eng.obs, "events", None) is not None:
+                out["events"] = eng.obs.events.stats()
         return out
 
     # -- worker thread ------------------------------------------------------
@@ -257,19 +273,30 @@ class EngineWorker:
         # only requests that genuinely *cannot* be admitted shed: with a
         # free slot the next tick admits from the queue, so waiters there
         # are one loop from service, not stuck
-        if self.max_queue_wait is None or not eng.queue \
-                or eng.pool.free_slots > 0:
+        use_classes = self._class_deadlines
+        if (self.max_queue_wait is None and not use_classes) \
+                or not eng.queue or eng.pool.free_slots > 0:
             return
         now = self.now_rel()
-        for r in scheduler_lib.expired_requests(eng.queue, now,
-                                                self.max_queue_wait):
-            if eng.cancel(r.uid):
+        for r in scheduler_lib.expired_requests(
+                eng.queue, now, self.max_queue_wait,
+                slo_classes=self.slo_classes if use_classes else None):
+            cls = getattr(r, "slo_class", "")
+            if eng.cancel(r.uid, reason="deadline"):
                 self.shed_count += 1
                 sink = self._sinks.pop(r.uid, None)
                 if sink is not None:
-                    sink(ShedEvent(uid=r.uid, reason=(
-                        f"queue wait {now - r.arrival_time:.3f}s exceeded "
-                        f"max_queue_wait {self.max_queue_wait:.3f}s")))
+                    wait = now - r.arrival_time
+                    if use_classes:
+                        reason = (f"queue wait {wait:.3f}s exceeded the "
+                                  f"deadline for slo_class "
+                                  f"{cls or 'standard'!r}")
+                    else:
+                        reason = (f"queue wait {wait:.3f}s exceeded "
+                                  f"max_queue_wait "
+                                  f"{self.max_queue_wait:.3f}s")
+                    sink(ShedEvent(uid=r.uid, reason=reason,
+                                   slo_class=cls))
 
     def _loop(self) -> None:
         # a crashed worker must fail loudly, not strand clients: shed every
@@ -281,7 +308,8 @@ class EngineWorker:
                 self.accepting = False
                 staged, self._staging = self._staging, []
             for req, deliver in staged:
-                deliver(ShedEvent(uid=req.uid, reason="replica crashed"))
+                deliver(ShedEvent(uid=req.uid, reason="replica crashed",
+                                  slo_class=getattr(req, "slo_class", "")))
             for uid, sink in list(self._sinks.items()):
                 sink(ShedEvent(uid=uid, reason="replica crashed"))
             self._sinks.clear()

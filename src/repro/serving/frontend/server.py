@@ -34,6 +34,7 @@ from typing import Optional, Set
 
 from repro.obs import CONTENT_TYPE as _METRICS_CT
 from repro.obs import ServingObs, frontend_metrics
+from repro.obs.registry import OPENMETRICS_CONTENT_TYPE as _OM_CT
 from repro.serving.engine import CommitEvent, Request
 from repro.serving.frontend import protocol
 from repro.serving.frontend.router import Overloaded, Router, ShedEvent
@@ -65,6 +66,9 @@ class ServeFrontend:
         if obs is None:
             obs = eng.obs if eng.obs is not None else ServingObs()
         self.obs = obs
+        # SLO class table for slo_class body validation (unknown tier ->
+        # 400); None when the obs object predates SLO support
+        self.slo_classes = getattr(obs, "slo_classes", None)
         self._http, self._submits, self._overloaded = frontend_metrics(
             obs.registry)
         self.block_length = eng.dcfg.block_length
@@ -198,11 +202,16 @@ class ServeFrontend:
             writer.write(protocol.json_response(200, self.router.stats()))
         elif method == "GET" and path == "/metrics":
             self._count("/metrics", 200)
+            # OpenMetrics negotiation: exemplars (trace-id joins on the
+            # counters) are only legal in the OpenMetrics exposition, so
+            # the default Prometheus 0.0.4 scrape stays byte-identical
+            om = "application/openmetrics-text" in headers.get("accept", "")
             writer.write(protocol.http_response(
-                200, self.obs.registry.expose().encode("utf-8"),
-                content_type=_METRICS_CT))
+                200,
+                self.obs.registry.expose(openmetrics=om).encode("utf-8"),
+                content_type=_OM_CT if om else _METRICS_CT))
         elif method == "POST" and path == "/v1/completions":
-            await self._completions(writer, body)
+            await self._completions(writer, body, headers)
         else:
             # unknown paths collapse to one label: client-chosen strings
             # must not mint unbounded metric label values
@@ -215,28 +224,39 @@ class ServeFrontend:
 
     # -- /v1/completions ----------------------------------------------------
 
-    async def _completions(self, writer, body: bytes) -> None:
+    async def _completions(self, writer, body: bytes,
+                           headers: Optional[dict] = None) -> None:
+        headers = headers or {}
+        # trace context first: even a 400/429 response carries the
+        # traceparent so clients can join their log line to ours
+        trace_id = protocol.parse_traceparent(headers.get("traceparent")) \
+            or protocol.mint_trace_id()
+        traceparent = protocol.format_traceparent(trace_id)
+        th = {"traceparent": traceparent}
         try:
             payload = json.loads(body or b"{}")
         except ValueError:
             writer.write(protocol.json_response(400, protocol.error_payload(
-                "bad_request", "body is not valid JSON")))
+                "bad_request", "body is not valid JSON"), headers=th))
             return
         try:
             ids, gen_len, stream = protocol.parse_completion(
                 payload, block_length=self.block_length,
                 max_seq_len=self.max_seq_len, vocab=self.vocab)
             policy, policy_params = protocol.parse_policy(payload)
+            slo_class = protocol.parse_slo_class(payload, self.slo_classes)
         except protocol.BadRequest as e:
             self._count("/v1/completions", 400)
             writer.write(protocol.json_response(
-                400, protocol.error_payload("bad_request", str(e))))
+                400, protocol.error_payload("bad_request", str(e)),
+                headers=th))
             return
 
         # uid=None: the engine assigns the next free uid at submit on the
         # worker thread; responses carry the uid from the commit events
         req = Request(prompt=ids, gen_length=gen_len,
-                      policy=policy, policy_params=policy_params)
+                      policy=policy, policy_params=policy_params,
+                      slo_class=slo_class, trace_id=trace_id)
         events: asyncio.Queue = asyncio.Queue()
         loop = asyncio.get_running_loop()
 
@@ -247,26 +267,34 @@ class ServeFrontend:
             # router hop: which replica took the request, and how long the
             # pick + stage took (spans land on the event-loop thread lane)
             with self.obs.trace.span("router.submit", cat="router",
-                                     args={"prompt_len": int(ids.size)}):
+                                     args={"prompt_len": int(ids.size),
+                                           "trace": trace_id,
+                                           "class": slo_class}):
                 worker = self.router.submit(req, deliver)
             self._submits.inc(replica=worker.name)
         except Overloaded as e:
             self._overloaded.inc()
             self._count("/v1/completions", 429)
             writer.write(protocol.json_response(
-                429, protocol.error_payload("overloaded", str(e))))
+                429, protocol.error_payload("overloaded", str(e)),
+                headers=th))
             return
         t0 = time.perf_counter()
 
         if stream:
-            await self._stream_response(writer, events, int(ids.size), t0)
+            await self._stream_response(writer, events, int(ids.size), t0,
+                                        trace_id, th)
         else:
-            await self._gathered_response(writer, events, int(ids.size), t0)
+            await self._gathered_response(writer, events, int(ids.size),
+                                          t0, trace_id, th)
 
     async def _stream_response(self, writer, events,
-                               prompt_len: int, t0: float) -> None:
+                               prompt_len: int, t0: float,
+                               trace_id: Optional[str] = None,
+                               trace_headers: Optional[dict] = None
+                               ) -> None:
         self._count("/v1/completions", 200)
-        writer.write(protocol.sse_headers())
+        writer.write(protocol.sse_headers(trace_headers))
         await writer.drain()
         ttft: Optional[float] = None
         ticks = 0
@@ -287,20 +315,30 @@ class ServeFrontend:
                 # buffered write, flushed by the transport: per-event
                 # drain() would wake the event loop per tick per slot and
                 # starve the worker threads of the GIL under load
-                writer.write(protocol.sse_event(
-                    "block_committed", protocol.commit_payload(ev)))
+                p = protocol.commit_payload(ev)
+                if trace_id is not None:
+                    # server-layer stamp (not commit_payload): the event
+                    # log's block_commit records carry the identical
+                    # payload fields, and "trace" is this stream's join
+                    # key, not part of the commit delta
+                    p["trace"] = trace_id
+                writer.write(protocol.sse_event("block_committed", p))
             if ev.done:
                 writer.write(protocol.sse_event("done",
                              protocol.completion_payload(
                                  ev.uid, self.model_name, prompt_len,
                                  ev.final_tokens, ticks, ttft,
-                                 time.perf_counter() - t0)))
+                                 time.perf_counter() - t0,
+                                 trace_id=trace_id)))
                 break
         writer.write(protocol.SSE_DONE)
         await writer.drain()
 
     async def _gathered_response(self, writer, events,
-                                 prompt_len: int, t0: float) -> None:
+                                 prompt_len: int, t0: float,
+                                 trace_id: Optional[str] = None,
+                                 trace_headers: Optional[dict] = None
+                                 ) -> None:
         ttft: Optional[float] = None
         ticks = 0
         while True:
@@ -308,7 +346,8 @@ class ServeFrontend:
             if isinstance(ev, ShedEvent):
                 self._count("/v1/completions", 429)
                 writer.write(protocol.json_response(
-                    429, protocol.error_payload("overloaded", ev.reason)))
+                    429, protocol.error_payload("overloaded", ev.reason),
+                    headers=trace_headers))
                 return
             ticks += 1
             if ttft is None and len(ev.positions):
@@ -319,7 +358,8 @@ class ServeFrontend:
                     200, protocol.completion_payload(
                         ev.uid, self.model_name, prompt_len,
                         ev.final_tokens, ticks, ttft,
-                        time.perf_counter() - t0)))
+                        time.perf_counter() - t0, trace_id=trace_id),
+                    headers=trace_headers))
                 return
 
 
@@ -342,7 +382,9 @@ def build_frontend(model, params, dcfg, *, model_name: str,
                    pool: str = "slot",
                    page_size: int = 16,
                    num_pages: Optional[int] = None,
-                   prefix_cache: bool = True) -> ServeFrontend:
+                   prefix_cache: bool = True,
+                   event_log=None,
+                   slo_classes=None) -> ServeFrontend:
     """Wire engines -> workers -> router -> frontend.  One independent
     engine per replica (each with its own slot pool, rng chain, and tick
     thread; params are shared read-only, and the jitted tick executable is
@@ -358,6 +400,11 @@ def build_frontend(model, params, dcfg, *, model_name: str,
     each replica in a jax.profiler device trace under ``profile_dir``.
     ``megatick_k=K`` fuses up to K ticks per engine dispatch
     (docs/megatick.md) — commit callbacks still see every per-tick event.
+    ``event_log`` (an :class:`repro.obs.events.EventLog` or a JSONL path)
+    wires the structured event log onto the shared obs root, and
+    ``slo_classes`` (a :func:`repro.obs.slo.resolve_classes` spec)
+    installs the SLO tier table — both must land before the per-replica
+    views fan out, which this function guarantees.
     """
     import jax
 
@@ -366,6 +413,13 @@ def build_frontend(model, params, dcfg, *, model_name: str,
 
     if obs is None:
         obs = ServingObs()
+    if slo_classes is not None:
+        obs.set_slo_classes(slo_classes)
+    if event_log is not None:
+        from repro.obs.events import EventLog
+        obs.set_event_log(event_log if isinstance(event_log, EventLog)
+                          else EventLog(event_log))
+    paged = pool == "paged"
     modeled = None
     if drift:
         try:
@@ -374,15 +428,16 @@ def build_frontend(model, params, dcfg, *, model_name: str,
             modeled = modeled_tick_stages(
                 model.cfg, dcfg, batch=num_slots,
                 prompt_len=max(1, max_seq_len - dcfg.gen_length),
-                megatick_k=megatick_k, host=HostConfig())
+                megatick_k=megatick_k, host=HostConfig(), paged=paged)
         except Exception as e:          # model outside analytical coverage
             print(f"drift monitor disabled (no analytical model): {e}")
+    host_stages = ("dispatch", "device_sync") + (
+        ("paged_io",) if paged else ())
     workers = []
     for i in range(replicas):
         rep_obs = obs.for_replica(f"replica-{i}")
         if modeled is not None:
-            rep_obs.set_drift_model(modeled,
-                                    host_stages=("dispatch", "device_sync"))
+            rep_obs.set_drift_model(modeled, host_stages=host_stages)
         eng = ServingEngine(model, params, dcfg, EngineConfig(
             num_slots=num_slots, max_seq_len=max_seq_len, mode=mode,
             policy=policy, mesh=mesh, rng=jax.random.PRNGKey(seed + i),

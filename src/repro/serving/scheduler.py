@@ -78,14 +78,30 @@ class SlowFastPolicy(Policy):
 
 
 def expired_requests(queue: Sequence, now: float,
-                     max_queue_wait: float) -> list:
-    """Still-queued requests whose wait exceeds ``max_queue_wait`` — the
+                     max_queue_wait: float,
+                     slo_classes=None) -> list:
+    """Still-queued requests whose wait exceeds their deadline — the
     backpressure shed policy: the frontend cancels these on the engine and
     answers 429/overloaded instead of letting queue wait grow unboundedly
-    (see docs/streaming_serving.md)."""
-    if max_queue_wait is None:
-        return []
-    return [r for r in queue if now - r.arrival_time > max_queue_wait]
+    (see docs/streaming_serving.md).
+
+    With ``slo_classes`` (a name -> :class:`repro.obs.slo.SLOClass`
+    table) each request's effective deadline is the tighter of
+    ``max_queue_wait`` and its class ``queue_deadline_s``; waits are
+    always measured from ``arrival_time`` — first submit, never a
+    restore."""
+    if slo_classes is None:
+        if max_queue_wait is None:
+            return []
+        return [r for r in queue if now - r.arrival_time > max_queue_wait]
+    from repro.obs import slo as slo_lib
+    out = []
+    for r in queue:
+        cls = slo_lib.get_class(slo_classes, getattr(r, "slo_class", ""))
+        deadline = slo_lib.queue_deadline(cls, max_queue_wait)
+        if deadline is not None and now - r.arrival_time > deadline:
+            out.append(r)
+    return out
 
 
 _POLICIES = {

@@ -462,17 +462,28 @@ class HostConfig:
 
     dispatch_s: float = 2e-4
     sync_s: float = 1e-4
+    # paged-pool bookkeeping flush (staged canvas page uploads + dirty
+    # block-table refreshes) per dispatch; only charged when the engine
+    # runs the paged backend
+    page_io_s: float = 5e-5
 
 
 def host_overhead_per_tick(host: HostConfig,
-                           megatick_k: int = 1) -> Dict[str, float]:
+                           megatick_k: int = 1,
+                           paged: bool = False) -> Dict[str, float]:
     """Modeled per-tick host stage seconds under K-tick megastepping.
 
-    Returns ``{"dispatch": s, "device_sync": s}`` — the same stage names
-    the engine's tick-path timers record, so the dict can be merged
-    directly into a :func:`repro.obs.drift.modeled_tick_stages` baseline.
+    Returns ``{"dispatch": s, "device_sync": s}`` (plus ``"paged_io"``
+    with ``paged=True``) — the same stage names the engine's tick-path
+    timers record, so the dict can be merged directly into a
+    :func:`repro.obs.drift.modeled_tick_stages` baseline.  All entries
+    are per-dispatch costs amortized over the K fused ticks (the paged
+    flush runs once per megastep: tables are constant across it).
     """
     if megatick_k < 1:
         raise ValueError(f"megatick_k must be >= 1, got {megatick_k}")
-    return {"dispatch": host.dispatch_s / megatick_k,
-            "device_sync": host.sync_s / megatick_k}
+    out = {"dispatch": host.dispatch_s / megatick_k,
+           "device_sync": host.sync_s / megatick_k}
+    if paged:
+        out["paged_io"] = host.page_io_s / megatick_k
+    return out

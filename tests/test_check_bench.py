@@ -42,6 +42,23 @@ GOOD_SERVE = {
                          "ticks_monotone": True,
                          "metrics": _scrape(2, 140)},
     },
+    "slo": {
+        "class_mix": {"interactive": 0.3, "standard": 0.5, "batch": 0.2},
+        "event_log": "BENCH_serve_events.jsonl",
+        "completed": 40, "shed": 10,
+        "by_class": {
+            "interactive": {"requests": 15, "completed": 12, "shed": 3},
+            "standard": {"requests": 25, "completed": 20, "shed": 5},
+            "batch": {"requests": 10, "completed": 8, "shed": 2},
+        },
+        "server": {
+            c: {"completed": n, "violations": {"ttft": 0, "latency": 0,
+                                               "shed": s}}
+            for c, n, s in (("interactive", 12, 3), ("standard", 20, 5),
+                            ("batch", 8, 2))},
+        "events": {"valid": True, "records": 300, "uids": 50,
+                   "by_event": {"submit": 50, "done": 40, "shed": 10}},
+    },
 }
 
 GOOD_OBS = {
@@ -132,6 +149,33 @@ def test_serve_stream_metrics_scrape_gates(tmp_path):
     # drift series count is informational only
     ok = json.loads(json.dumps(GOOD_SERVE))
     ok["load"]["one_replica"]["metrics"]["drift"] = []
+    assert check_bench.main(
+        [_write(tmp_path, "BENCH_serve_stream.json", ok)]) == 0
+
+
+def test_serve_stream_slo_gates(tmp_path):
+    for mutate in (
+        # a payload without the SLO window at all is a regression
+        lambda b: b.pop("slo"),
+        # the mixed-class window must exercise more than one tier
+        lambda b: b["slo"].__setitem__(
+            "by_class", {"standard": {"requests": 5, "completed": 5,
+                                      "shed": 0}}),
+        lambda b: b["slo"].__setitem__("completed", 0),
+        # server rollup missing a class the client completed work in
+        lambda b: b["slo"]["server"].pop("interactive"),
+        # event log failed lifecycle validation (or came back empty)
+        lambda b: b["slo"]["events"].__setitem__("valid", False),
+        lambda b: b["slo"]["events"].__setitem__("records", 0),
+        lambda b: b["slo"]["events"].__setitem__("uids", 0),
+    ):
+        bad = json.loads(json.dumps(GOOD_SERVE))
+        mutate(bad)
+        assert check_bench.main(
+            [_write(tmp_path, "BENCH_serve_stream.json", bad)]) == 1
+    # per-class violation counts are informational, never a failure
+    ok = json.loads(json.dumps(GOOD_SERVE))
+    ok["slo"]["server"]["interactive"]["violations"]["ttft"] = 12
     assert check_bench.main(
         [_write(tmp_path, "BENCH_serve_stream.json", ok)]) == 0
 

@@ -1,0 +1,490 @@
+"""Request-scoped telemetry (docs/observability.md): crash-safe
+structured event log + lifecycle validation, SLO tiers, logquery CLI,
+trace-context propagation through router failover, OpenMetrics
+exemplars, the paged_io drift stage, and the acceptance pin — the event
+log's ``block_commit`` stream is bit-for-bit the SSE ``block_committed``
+payload stream across megatick K in {1, 4} and pool in {slot, paged}."""
+import asyncio
+import json
+import math
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.core import diffusion
+from repro.models.registry import build_model
+from repro.obs import (Counter, EventLog, Registry, ServingObs,
+                       parse_exposition, read_events, resolve_classes,
+                       validate_events)
+from repro.obs import logquery
+from repro.obs.drift import modeled_tick_stages
+from repro.obs.slo import SLOClass, get_class, queue_deadline
+from repro.serving import Request, ServingEngine
+from repro.serving.frontend import Overloaded, build_frontend
+from repro.serving.frontend import loadgen, protocol
+from repro.sim.analytical import HostConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = base.get_config("llada-8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _dcfg(gen=16, block=8, steps=4):
+    return diffusion.DiffusionConfig(gen_length=gen, block_length=block,
+                                     steps_per_block=steps,
+                                     cache_mode="none")
+
+
+def _prompt(cfg, seed, n):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n,), 0, cfg.vocab - 2), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# EventLog: ring, sink, crash safety
+# ---------------------------------------------------------------------------
+
+def test_eventlog_in_memory_ring():
+    ev = EventLog()                          # path=None: memory only
+    for i in range(3):
+        ev.emit("submit", uid=1 + i, replica="r0", t=float(i))
+    tail = ev.tail()
+    assert [r["uid"] for r in tail] == [1, 2, 3]
+    assert all(r["v"] == 1 and r["event"] == "submit" for r in tail)
+    assert ev.tail(1)[0]["uid"] == 3
+    st = ev.stats()
+    assert st["emitted"] == 3 and st["flushed"] == 0
+    assert st["path"] is None and st["dropped"] == 0
+    ev.close()                               # no-op without a sink
+    with pytest.raises(ValueError, match="capacity"):
+        EventLog(capacity=0)
+
+
+def test_eventlog_file_sink_and_context_manager(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    with EventLog(path, autoflush=False, fsync=False) as ev:
+        ev.emit("submit", uid=7, replica="r0", trace="ab" * 16,
+                cls="interactive", t=0.25, prompt_len=8)
+        assert ev.stats()["pending"] == 1
+    # __exit__ -> close() flushed the tail
+    recs = read_events(path)
+    assert len(recs) == 1
+    r = recs[0]
+    assert r["uid"] == 7 and r["event"] == "submit"
+    assert r["trace"] == "ab" * 16 and r["cls"] == "interactive"
+    assert r["t"] == 0.25 and r["prompt_len"] == 8
+    assert isinstance(r["ts"], float)
+
+
+def test_eventlog_numpy_fields_serialize_at_flush(tmp_path):
+    """emit() accepts ndarray/np-scalar fields verbatim; flush converts."""
+    path = str(tmp_path / "events.jsonl")
+    with EventLog(path, autoflush=False, fsync=False) as ev:
+        ev.emit("block_commit", uid=1, replica="r0",
+                positions=np.asarray([3, 1], np.int64),
+                tokens=np.asarray([9, 8], np.int32),
+                masks_left=np.int32(4))
+    r = read_events(path)[0]
+    assert r["positions"] == [3, 1] and r["tokens"] == [9, 8]
+    assert r["masks_left"] == 4
+
+
+def test_eventlog_bounded_ring_drops_oldest(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    ev = EventLog(path, capacity=2, autoflush=False, fsync=False)
+    for i in range(5):
+        ev.emit("submit", uid=1 + i, replica="r0")
+    st = ev.stats()
+    assert st["emitted"] == 5 and st["dropped"] == 3
+    ev.close()
+    # only the newest 2 unflushed records survived the ring
+    assert [r["uid"] for r in read_events(path)] == [4, 5]
+
+
+def test_read_events_skips_torn_tail_only(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    with EventLog(path, autoflush=False, fsync=False) as ev:
+        ev.emit("submit", uid=1, replica="r0")
+        ev.emit("admit", uid=1, replica="r0")
+    with open(path, "a") as f:
+        f.write('{"v":1,"ts":0,"event":"done","uid"')   # crash mid-write
+    recs = read_events(path)                 # torn tail skipped
+    assert [r["event"] for r in recs] == ["submit", "admit"]
+    with pytest.raises(ValueError, match="corrupt"):
+        read_events(path, strict=True)
+    # a torn line *before* the end is corruption even when lenient
+    with open(path, "a") as f:
+        f.write('\n{"v":1,"ts":0,"event":"done","uid":1,"replica":"r0"}\n')
+    with pytest.raises(ValueError, match="corrupt"):
+        read_events(path)
+
+
+# ---------------------------------------------------------------------------
+# validate_events: schema + lifecycle state machine
+# ---------------------------------------------------------------------------
+
+def _rec(event, uid, **kw):
+    out = {"v": 1, "ts": 0.0, "event": event, "uid": uid, "replica": "r0"}
+    out.update(kw)
+    return out
+
+
+def test_validate_events_golden_lifecycle():
+    recs = [
+        _rec("submit", 1), _rec("policy_decision", 1), _rec("admit", 1),
+        _rec("block_commit", 1), _rec("preempt", 1), _rec("restore", 1),
+        _rec("block_commit", 1), _rec("done", 1),
+        _rec("submit", 2), _rec("shed", 2),
+        _rec("prefix_hit", None), _rec("evict", None),
+    ]
+    # dicts and raw JSONL lines are both accepted
+    summary = validate_events([json.dumps(r) for r in recs],
+                              require_terminal=True)
+    assert summary["records"] == len(recs)
+    assert summary["by_event"]["block_commit"] == 2
+    assert summary["uids"] == {1: "DONE", 2: "SHED"}
+
+
+@pytest.mark.parametrize("recs,msg", [
+    ([_rec("admit", 1)], "expected 'submit'"),
+    ([_rec("submit", 1), _rec("block_commit", 1)], "illegal edge"),
+    ([_rec("submit", 1), _rec("admit", 1), _rec("done", 1),
+      _rec("block_commit", 1)], "after terminal"),
+    ([_rec("warp", 1)], "unknown event"),
+    ([{"v": 9, "ts": 0.0, "event": "submit", "uid": 1, "replica": "r0"}],
+     "schema version"),
+    ([_rec("admit", None)], "requires a request uid"),
+    ([_rec("submit", "one")], "uid must be int"),
+    ([{"v": 1, "event": "submit"}], "missing fields"),
+    ([_rec("submit", 1, ts="zero")], "ts must be a number"),
+])
+def test_validate_events_rejects_illegal_logs(recs, msg):
+    with pytest.raises(ValueError, match=msg):
+        validate_events(recs)
+
+
+def test_validate_events_require_terminal():
+    recs = [_rec("submit", 1), _rec("admit", 1)]
+    assert validate_events(recs)["uids"] == {1: "ACTIVE"}
+    with pytest.raises(ValueError, match=r"without a terminal.*\[1\]"):
+        validate_events(recs, require_terminal=True)
+
+
+# ---------------------------------------------------------------------------
+# SLO tiers
+# ---------------------------------------------------------------------------
+
+def test_slo_default_ladder_and_overlay():
+    table = resolve_classes(None)
+    assert set(table) == {"interactive", "standard", "batch"}
+    it = table["interactive"]
+    assert (it.ttft_deadline_s, it.latency_deadline_s,
+            it.queue_deadline_s) == (2.0, 20.0, 4.0)
+    assert table["batch"].ttft_deadline_s == math.inf
+    # JSON overlay merges field-wise and can mint new classes
+    table = resolve_classes(
+        '{"interactive": {"ttft_deadline_s": 0.5},'
+        ' "gold": {"latency_deadline_s": 3.0}}')
+    assert table["interactive"].ttft_deadline_s == 0.5
+    assert table["interactive"].latency_deadline_s == 20.0   # kept
+    assert table["gold"].latency_deadline_s == 3.0
+    with pytest.raises(ValueError, match="unknown fields"):
+        resolve_classes({"interactive": {"ttft": 1.0}})
+    with pytest.raises(ValueError, match="not valid JSON"):
+        resolve_classes("{nope")
+    with pytest.raises(ValueError, match="JSON object"):
+        resolve_classes("[1]")
+
+
+def test_slo_violations_and_queue_deadline():
+    c = SLOClass("t", ttft_deadline_s=1.0, latency_deadline_s=5.0,
+                 queue_deadline_s=2.0)
+    assert c.violations(0.5, 4.0) == ()
+    assert c.violations(1.5, 4.0) == ("ttft",)
+    assert c.violations(1.5, 6.0) == ("ttft", "latency")
+    assert c.violations(None, 6.0) == ("latency",)   # no first commit
+    table = resolve_classes(None)
+    assert get_class(table, "interactive").name == "interactive"
+    assert get_class(table, "nope").name == "standard"
+    assert get_class(table, "").name == "standard"
+    assert queue_deadline(c, 1.0) == 1.0             # tighter worker bound
+    assert queue_deadline(c, None) == 2.0            # class bound only
+    assert queue_deadline(None, None) is None        # wait forever
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: event log vs SSE commit stream, K x pool grid
+# ---------------------------------------------------------------------------
+
+_PAYLOAD_KEYS = ("uid", "tick", "block_idx", "step_in_block",
+                 "positions", "tokens", "masks_left")
+
+
+@pytest.mark.parametrize("megatick_k", [1, 4])
+@pytest.mark.parametrize("pool", ["slot", "paged"])
+def test_event_log_matches_commit_stream(setup, tmp_path, megatick_k,
+                                         pool):
+    """Bit-for-bit pin: for every streaming request, the event log's
+    ``block_commit`` records carry exactly the fields of the SSE
+    ``block_committed`` payloads (protocol.commit_payload over the same
+    CommitEvents), one record per tick, in order — under both the
+    per-tick and the fused megatick loop, on both storage backends."""
+    cfg, model, params = setup
+    path = str(tmp_path / f"ev_{pool}_{megatick_k}.jsonl")
+    obs = ServingObs().set_event_log(
+        EventLog(path, autoflush=False, fsync=False))
+    kw = {"pool": "paged", "page_size": 8} if pool == "paged" else {}
+    eng = ServingEngine(model, params, _dcfg(), num_slots=2,
+                        max_seq_len=48, mode="none",
+                        rng=jax.random.PRNGKey(0), obs=obs,
+                        megatick_k=megatick_k, **kw)
+    sinks = {}
+    for i in range(3):
+        r = Request(uid=1 + i, prompt=_prompt(cfg, 40 + i, 8),
+                    gen_length=16)
+        sinks[r.uid] = []
+        eng.submit(r, on_commit=sinks[r.uid].append)
+    while eng.pending:
+        if not eng.tick():
+            break
+    obs.events.close()
+
+    recs = read_events(path)
+    summary = validate_events(recs, require_terminal=True)
+    assert summary["uids"] == {1: "DONE", 2: "DONE", 3: "DONE"}
+    logged = {}
+    for r in recs:
+        if r["event"] == "block_commit":
+            logged.setdefault(r["uid"], []).append(r)
+    for uid, events in sinks.items():
+        expected = [protocol.commit_payload(ev) for ev in events]
+        got = logged[uid]
+        assert len(got) == len(expected)     # one record per touched tick
+        for rec, pay in zip(got, expected):
+            for k in _PAYLOAD_KEYS:
+                assert rec[k] == pay[k], (uid, k, rec, pay)
+            assert rec["cls"] == "standard"
+    # done records carry the SLO verdict fields
+    dones = {r["uid"]: r for r in recs if r["event"] == "done"}
+    assert set(dones) == {1, 2, 3}
+    for d in dones.values():
+        assert d["violations"] == [] and d["tokens"] == 16
+        assert d["latency_s"] >= 0 and d["ttft_s"] is not None
+
+
+# ---------------------------------------------------------------------------
+# Satellite: preempt/restore keeps the original arrival anchor
+# ---------------------------------------------------------------------------
+
+def test_preempt_restore_preserves_arrival_anchor(setup, tmp_path):
+    """A preempted-then-restored request keeps its first-submit
+    ``arrival_time``: the done event's latency spans submit -> done, not
+    restore -> done, and the lifecycle replays submit/admit/preempt/
+    restore/done in order."""
+    cfg, model, params = setup
+    path = str(tmp_path / "preempt.jsonl")
+    obs = ServingObs().set_event_log(
+        EventLog(path, autoflush=False, fsync=False))
+    eng = ServingEngine(model, params, _dcfg(gen=8), num_slots=2,
+                        max_seq_len=16, mode="warm", pool="paged",
+                        page_size=8, rng=jax.random.PRNGKey(3), obs=obs)
+    prompt = _prompt(cfg, 31, 8)
+    for i in range(3):
+        eng.submit(Request(uid=1 + i, prompt=prompt.copy(), gen_length=8))
+    ticks, victim = 0, None
+    while eng.pending:
+        if not eng.tick():
+            break
+        ticks += 1
+        if ticks == 2 and victim is None:
+            victim = [s.request.uid for s in eng.slots
+                      if s is not None][-1]
+            eng.preempt(victim)
+    obs.events.close()
+    assert eng.pool.stats()["preemptions"] == 1
+    assert eng.pool.stats()["restores"] == 1
+    # CompletedRequest keeps the original (offline: 0.0) arrival
+    by_uid = {c.uid: c for c in eng.completed}
+    assert set(by_uid) == {1, 2, 3}
+    assert all(c.arrival_time == 0.0 for c in by_uid.values())
+
+    recs = read_events(path)
+    validate_events(recs, require_terminal=True)
+    vict = [r for r in recs if r["uid"] == victim]
+    order = [r["event"] for r in vict if r["event"] != "block_commit"]
+    assert order[0] == "submit" and order[-1] == "done"
+    assert order.index("preempt") < order.index("restore")
+    t_restore = next(r["t"] for r in vict if r["event"] == "restore")
+    done = next(r for r in vict if r["event"] == "done")
+    # latency is anchored at the original arrival (t=0), so it equals the
+    # done record's virtual-clock stamp — strictly more than a
+    # restore-anchored latency would be
+    assert done["latency_s"] == pytest.approx(done["t"], abs=1e-5)
+    assert done["latency_s"] > done["t"] - t_restore
+
+
+# ---------------------------------------------------------------------------
+# Trace-context propagation through router failover
+# ---------------------------------------------------------------------------
+
+def test_traceparent_and_slo_class_parsing():
+    tid = protocol.mint_trace_id()
+    assert len(tid) == 32 and int(tid, 16) != 0
+    hdr = protocol.format_traceparent(tid)
+    assert protocol.parse_traceparent(hdr) == tid
+    assert protocol.parse_traceparent(None) is None
+    assert protocol.parse_traceparent("junk") is None
+    assert protocol.parse_traceparent("00-" + "0" * 32 + "-" + "1" * 16
+                                      + "-01") is None
+
+
+def test_trace_id_survives_router_failover(setup, tmp_path):
+    """A client traceparent minted before submit survives the preferred
+    replica refusing: the SSE done payload echoes the trace id and the
+    event log's submit/done records carry it with the failover replica's
+    label — one id joins client log, event log, and trace."""
+    cfg, model, params = setup
+    dcfg = _dcfg(gen=8)
+    path = str(tmp_path / "failover.jsonl")
+    prompt = _prompt(cfg, 9, 8)
+    tid = protocol.mint_trace_id()
+
+    async def go():
+        fe = build_frontend(model, params, dcfg, model_name="llada-8b",
+                            mode="none", max_seq_len=48, replicas=2,
+                            num_slots=1, event_log=path)
+        w0 = fe.router.workers[0]
+
+        def refuse(request, deliver):
+            raise Overloaded(f"{w0.name} full")
+
+        w0.submit = refuse                   # stays a routing candidate
+        await fe.start()
+        try:
+            row = await loadgen.complete(
+                fe.url, prompt.tolist(), 8, slo_class="interactive",
+                traceparent=protocol.format_traceparent(tid))
+        finally:
+            await fe.shutdown()
+            fe.obs.events.close()
+        return row
+
+    row = asyncio.run(go())
+    assert row["status"] == "ok"
+    assert row["trace_id"] == tid            # echoed on the SSE done event
+    recs = read_events(path)
+    validate_events(recs, require_terminal=True)
+    submit = next(r for r in recs if r["event"] == "submit")
+    assert submit["trace"] == tid
+    assert submit["replica"] == "replica-1"  # failover target
+    assert submit["cls"] == "interactive"
+    done = next(r for r in recs if r["event"] == "done")
+    assert done["trace"] == tid and done["replica"] == "replica-1"
+
+
+# ---------------------------------------------------------------------------
+# logquery CLI pins
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def golden_log(tmp_path):
+    path = str(tmp_path / "gold.jsonl")
+    with EventLog(path, autoflush=False, fsync=False) as ev:
+        ev.emit("submit", uid=1, replica="r0", cls="interactive",
+                trace="cd" * 16, t=0.0)
+        ev.emit("admit", uid=1, replica="r0", cls="interactive", t=0.5)
+        ev.emit("block_commit", uid=1, replica="r0", cls="interactive",
+                t=1.0, tick=1, block_idx=0, step_in_block=0,
+                positions=[8, 9], tokens=[5, 6], masks_left=6)
+        ev.emit("done", uid=1, replica="r0", cls="interactive", t=2.0,
+                latency_s=2.0, ttft_s=1.0, ticks=4, tokens=8,
+                violations=[])
+        ev.emit("submit", uid=2, replica="r0", t=0.1)
+        ev.emit("shed", uid=2, replica="r0", t=3.0, reason="queue_full")
+    return path
+
+
+def test_logquery_validate_and_summary(golden_log, capsys):
+    assert logquery.main([golden_log, "--validate"]) == 0
+    assert "OK: 6 records, 2 requests" in capsys.readouterr().out
+    assert logquery.main([golden_log]) == 0
+    out = capsys.readouterr().out
+    assert "6 records, 2 requests" in out
+    assert "event block_commit" in out and "class interactive" in out
+    # filters compose with every action
+    assert logquery.main([golden_log, "--uid", "2", "--records"]) == 0
+    rows = [json.loads(l) for l in
+            capsys.readouterr().out.strip().splitlines()]
+    assert [r["event"] for r in rows] == ["submit", "shed"]
+
+
+def test_logquery_timeline_and_rollup(golden_log, capsys):
+    assert logquery.main([golden_log, "--timeline", "1"]) == 0
+    lines = capsys.readouterr().out.strip().splitlines()
+    assert lines[0].startswith("+0.000000s submit")
+    assert lines[-1].startswith("+2.000000s done")
+    assert logquery.main([golden_log, "--rollup"]) == 0
+    roll = json.loads(capsys.readouterr().out)
+    it = roll["interactive"]
+    assert it["completed"] == 1 and it["violations"] == 0
+    assert it["latency_p50_s"] == pytest.approx(2.0)
+    assert it["ttft_p50_s"] == pytest.approx(1.0)
+    assert it["queue_wait_p50_s"] == pytest.approx(0.5)
+    assert roll["standard"]["shed"] == 1
+    # missing uid: non-zero exit
+    assert logquery.main([golden_log, "--timeline", "9"]) == 1
+
+
+def test_logquery_validate_fails_on_bad_log(tmp_path, capsys):
+    path = str(tmp_path / "bad.jsonl")
+    with EventLog(path, autoflush=False, fsync=False) as ev:
+        ev.emit("admit", uid=1, replica="r0")    # no submit first
+    assert logquery.main([path, "--validate"]) == 1
+    assert "INVALID:" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# OpenMetrics exemplars: trace join visible only when asked for
+# ---------------------------------------------------------------------------
+
+def test_counter_exemplar_only_in_openmetrics_exposition():
+    reg = Registry()
+    c = Counter("dllm_requests_completed_total", "done", ("replica",))
+    reg.register(c)
+    c.inc(replica="r0", exemplar={"trace_id": "ef" * 16})
+    default = reg.expose()
+    assert "# EOF" not in default and "trace_id" not in default
+    # the 0.0.4 scrape still parses (byte-compat pin)
+    parsed = parse_exposition(default)
+    assert parsed["dllm_requests_completed_total"][
+        '{replica="r0"}'] == 1.0
+    om = reg.expose(openmetrics=True)
+    assert om.endswith("# EOF\n")
+    assert '# {trace_id="' + "ef" * 16 + '"}' in om
+
+
+# ---------------------------------------------------------------------------
+# Satellite: paged gather/scatter drift stage
+# ---------------------------------------------------------------------------
+
+def test_modeled_paged_io_stage():
+    cfg = base.get_config("llada-8b", smoke=True)
+    dcfg = _dcfg()
+    host = HostConfig()
+    flat = modeled_tick_stages(cfg, dcfg, batch=4, prompt_len=16,
+                               host=host)
+    assert "paged_io" not in flat            # slot pool: no flush stage
+    paged = modeled_tick_stages(cfg, dcfg, batch=4, prompt_len=16,
+                                host=host, paged=True)
+    assert paged["paged_io"] == pytest.approx(host.page_io_s)
+    fused = modeled_tick_stages(cfg, dcfg, batch=4, prompt_len=16,
+                                host=host, paged=True, megatick_k=4)
+    # one pool flush per dispatch, amortized over the K fused ticks
+    assert fused["paged_io"] == pytest.approx(host.page_io_s / 4)
